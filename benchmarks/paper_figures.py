@@ -1,0 +1,171 @@
+"""Reproductions of every SpecOffload table/figure via the calibrated
+simulator (see EXPERIMENTS.md §Paper-claims for the side-by-side)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.base import MISTRAL_7B, MIXTRAL_8X7B, MIXTRAL_8X22B
+from repro.core.planner import ParaSpecPlanner, Policy, Workload
+from repro.core.spec_decode import (acceptance_pmf, expected_generated,
+                                    expected_generated_paper_eq12)
+from repro.data.pipeline import DATASET_STATS
+from repro.sim.hardware import ENV1, ENV2
+from repro.sim.simulator import (ablation, decode_timeline, disk_mode,
+                                 end_to_end, memory_sweep)
+
+GEN_LEN = 48
+
+# the paper's measured numbers for the comparison columns
+PAPER = {
+    "fig5_env1_8x7b": {"specoffload": 24.74, "flexgen": 9.74,
+                       "accelerate": 5.27, "deepspeed": 5.25,
+                       "fiddler": 6.12},
+    "fig5_env2_8x22b": {"specoffload": 5.91},
+    "fig6_util": 0.5867,
+    "fig1_util": {"flexgen": 0.13, "accelerate": 0.072, "deepspeed": 0.082,
+                  "fiddler": 0.071},
+    "table4_8x7b": {"all": 24.743, "no_policy": 15.624, "serial_sd": 17.048,
+                    "no_sd": 12.369},
+    "table4_8x22b": {"all": 5.911, "no_policy": 3.486, "serial_sd": 4.146,
+                     "no_sd": 1.698},
+    "fig8_ratio": 0.293,
+}
+
+
+def _wl(dataset="summeval", gen_len=GEN_LEN, p=0.75):
+    return Workload(int(DATASET_STATS[dataset]["s_avg"]), gen_len, p)
+
+
+def fig5_throughput(rows: list):
+    wl = _wl()
+    res1 = end_to_end(MIXTRAL_8X7B, MISTRAL_7B, ENV1, wl,
+                      Policy(80, 192, 8, 8))
+    for k, r in res1.items():
+        ours, paper = r.throughput, PAPER["fig5_env1_8x7b"].get(k)
+        rows.append(("fig5_env1_8x7b_" + k, ours,
+                     f"paper={paper}" if paper else ""))
+    spec = res1["specoffload"].throughput
+    best_base = max(r.throughput for k, r in res1.items()
+                    if k != "specoffload")
+    rows.append(("fig5_env1_speedup_vs_best", spec / best_base,
+                 "paper=2.53x"))
+
+    res2 = end_to_end(MIXTRAL_8X22B, MISTRAL_7B, ENV2, wl,
+                      Policy(16, 64, 8, 8))
+    rows.append(("fig5_env2_8x22b_specoffload",
+                 res2["specoffload"].throughput, "paper=5.91"))
+    best2 = max(r.throughput for k, r in res2.items() if k != "specoffload")
+    rows.append(("fig5_env2_speedup_vs_best",
+                 res2["specoffload"].throughput / best2, "paper=2.54x"))
+
+
+def fig1_fig6_utilization(rows: list):
+    wl = _wl()
+    res = end_to_end(MIXTRAL_8X7B, MISTRAL_7B, ENV1, wl,
+                     Policy(80, 192, 8, 8))
+    spec_u = res["specoffload"].gpu_util
+    rows.append(("fig6_gpu_util_specoffload", spec_u, "paper=0.5867"))
+    for k in ("flexgen", "accelerate", "deepspeed", "fiddler"):
+        rows.append((f"fig1_gpu_util_{k}", res[k].gpu_util,
+                     f"paper={PAPER['fig1_util'][k]}"))
+    rows.append(("fig6_util_ratio_vs_flexgen",
+                 spec_u / res["flexgen"].gpu_util, "paper=4.49x"))
+    tl = decode_timeline(MIXTRAL_8X7B, MISTRAL_7B, ENV1, wl,
+                         Policy(80, 192, 8, 8))
+    rows.append(("fig7_draft_burst_fraction", tl.busy_fraction(),
+                 "paper~26s/28s=0.93"))
+
+
+def fig2_memory(rows: list):
+    wl = _wl()
+    sweep = memory_sweep(MIXTRAL_8X7B, ENV1, wl, [0.9, 0.166])
+    drop = 1 - sweep[1]["throughput"] / sweep[0]["throughput"]
+    rows.append(("fig2_8x7b_thr_drop_for_5.4x_mem_cut", drop,
+                 "paper=0.13 (marginal utility of GPU memory)"))
+    sweep22 = memory_sweep(MIXTRAL_8X22B, ENV1, wl, [0.9, 0.31])
+    drop22 = 1 - sweep22[1]["throughput"] / sweep22[0]["throughput"]
+    rows.append(("fig2_8x22b_thr_drop_for_2.9x_mem_cut", drop22,
+                 "paper=0.05"))
+
+
+def table3_breakdown(rows: list):
+    wl = _wl()
+    pl = ParaSpecPlanner(MIXTRAL_8X7B, MISTRAL_7B, ENV1)
+    rep = pl.evaluate(Policy(80, 192, 8, 8), wl)
+    import math
+    slots = 2 * math.ceil(wl.gen_len / rep.expected_tokens)
+    rows.append(("table3_P_total_s", rep.t_prefill, "paper=183.28"))
+    rows.append(("table3_D_total_s", rep.t_decode, "paper=569.21"))
+    rows.append(("table3_D_compute_gpu_draft_s",
+                 min(rep.t_draft, rep.detail["t_round"]) * slots,
+                 "paper=489.02"))
+    rows.append(("table3_D_compute_cpu_s",
+                 rep.detail["t_attn_host"] * slots, "paper=531.23"))
+    rows.append(("table3_D_weight_read_s",
+                 rep.detail["t_ffn_stream"] * slots, "paper=236.2"))
+
+
+def table4_ablation(rows: list):
+    wl = _wl()
+    ab = ablation(MIXTRAL_8X7B, MISTRAL_7B, ENV1, wl,
+                  Policy(80, 192, 8, 8), Policy(50, 256, 5, 2))
+    for k, r in ab.items():
+        rows.append((f"table4_8x7b_{k}", r.throughput,
+                     f"paper={PAPER['table4_8x7b'][k]}"))
+    ab2 = ablation(MIXTRAL_8X22B, MISTRAL_7B, ENV2, wl,
+                   Policy(16, 64, 8, 8), Policy(16, 32, 6, 6))
+    for k, r in ab2.items():
+        rows.append((f"table4_8x22b_{k}", r.throughput,
+                     f"paper={PAPER['table4_8x22b'][k]}"))
+
+
+def fig8_disk(rows: list):
+    wl = _wl()
+    dm = disk_mode(MIXTRAL_8X22B, MISTRAL_7B, ENV1, wl, Policy(16, 64, 8, 8))
+    rows.append(("fig8_disk_ratio", dm["ratio"], "paper=0.293"))
+    rows.append(("fig8_disk_bytes_gib", dm["disk_bytes_gib"], ""))
+
+
+def policy_sweep(rows: list):
+    """Tables 5-10: throughput across the policy grid; checks the planner's
+    qualitative findings (n_cand sweet spot, batch knee)."""
+    wl = _wl("humaneval")
+    pl = ParaSpecPlanner(MIXTRAL_8X7B, MISTRAL_7B, ENV1)
+    # Table 5 rows 2-6: (80,160,6,m) for m in 1,2,4,6,8 -> monotone rise
+    thr = [pl.evaluate(Policy(80, 160, 6, m), wl).throughput
+           for m in (1, 2, 4, 6, 8)]
+    rows.append(("table5_ncand_monotone_1to6",
+                 float(np.all(np.diff(thr[:4]) > 0)),
+                 f"paper rows 2-5 rise 15.9->33.7 (ours {thr[0]:.1f}->"
+                 f"{thr[3]:.1f})"))
+    best = pl.search(wl)
+    rows.append(("table5_planner_best_thr", best.throughput,
+                 f"policy={best.policy.astuple()} paper best 34.7 "
+                 f"@(80,256,10,6)"))
+    # oversized decode batch collapses (paper rows 36-45)
+    big = pl.evaluate(Policy(80, 320, 5, 1), wl)
+    rows.append(("table5_bs320_overload_feasible", float(big.feasible),
+                 "paper: 320 collapses to 4.4 tok/s (mem/cpu overload)"))
+
+
+def acceptance_model(rows: list):
+    for p in (0.3, 0.7, 0.9):
+        for m in (4, 8):
+            e = expected_generated(p, m)
+            e_paper = expected_generated_paper_eq12(p, m)
+            pmf = acceptance_pmf(p, m)
+            mc = float((np.arange(1, m + 2) * np.asarray(pmf)).sum())
+            rows.append((f"accept_E[n]_p{p}_m{m}", e,
+                         f"pmf_sum={mc:.3f} paper_eq12={e_paper:.3f} "
+                         f"(erratum: printed closed form != own pmf)"))
+
+
+def run(rows: list):
+    fig5_throughput(rows)
+    fig1_fig6_utilization(rows)
+    fig2_memory(rows)
+    table3_breakdown(rows)
+    table4_ablation(rows)
+    fig8_disk(rows)
+    policy_sweep(rows)
+    acceptance_model(rows)

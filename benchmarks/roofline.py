@@ -1,0 +1,263 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+For every (arch x input-shape x mesh) record produced by
+``repro.launch.dryrun`` this derives the three roofline terms on TPU v5e:
+
+    compute   = FLOPs / (chips * 197e12)
+    memory    = bytes / (chips * 819e9)
+    collective= collective_bytes / (chips * 50e9)
+
+Methodology notes (also in EXPERIMENTS.md §Roofline):
+* XLA's ``cost_analysis()`` counts each while-loop body ONCE, so HLO FLOPs/
+  bytes under-count scanned layers.  The primary terms therefore use
+  *analytic* per-step FLOPs/bytes (6·N·D train / 2·N_active·D serve, plus
+  KV traffic), with the HLO numbers reported as cross-checks and the ratio
+  MODEL_FLOPS/HLO_FLOPs listed per the brief.
+* Collective bytes from the HLO parse are likewise body-once; the analytic
+  model (FSDP weight gathers + TP reductions + MoE all-to-all) is the
+  primary number and the parse the cross-check.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import ARCHS, get_config
+from repro.configs.base import INPUT_SHAPES, ModelConfig
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_PER_CHIP = 16 * 2 ** 30
+
+
+# ---------------------------------------------------------------------------
+# analytic per-step work model
+
+
+def model_flops(cfg: ModelConfig, shape) -> float:
+    """Global model FLOPs for one step: 6·N·D (train) / 2·N_active·D."""
+    n = cfg.active_param_count()
+    if shape.phase == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.phase == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        flops = 2.0 * n * tokens
+        # quadratic attention term
+        if not cfg.attention_free:
+            att = 0
+            for k in cfg.layer_pattern:
+                if k == "attn":
+                    att += shape.seq_len
+                elif k == "swa":
+                    att += min(cfg.sliding_window, shape.seq_len)
+            att *= cfg.n_groups
+            flops += (2.0 * 2 * shape.global_batch * shape.seq_len
+                      * cfg.n_heads * cfg.head_dim * att / cfg.n_layers
+                      * cfg.n_layers) / cfg.n_layers * 1.0 if False else 0
+            flops += 4.0 * shape.global_batch * shape.seq_len * \
+                cfg.n_heads * cfg.head_dim * _avg_ctx(cfg, shape) * \
+                cfg.n_layers / 2
+        return flops
+    # decode: one token per sequence
+    tokens = shape.global_batch
+    flops = 2.0 * n * tokens
+    if not cfg.attention_free:
+        flops += 4.0 * tokens * cfg.n_heads * cfg.head_dim * \
+            _avg_ctx(cfg, shape) * cfg.n_layers
+    return flops
+
+
+def _avg_ctx(cfg: ModelConfig, shape) -> float:
+    """Average attended context per layer (window-aware)."""
+    ctx = 0
+    n_att = 0
+    for k in cfg.layer_pattern:
+        if k == "attn":
+            ctx += shape.seq_len
+            n_att += 1
+        elif k == "swa":
+            ctx += min(cfg.sliding_window, shape.seq_len)
+            n_att += 1
+    return ctx / max(n_att, 1)
+
+
+def model_bytes(cfg: ModelConfig, shape) -> float:
+    """Global HBM traffic for one step (weights + KV + activations)."""
+    p = cfg.param_bytes()
+    if shape.phase == "train":
+        tokens = shape.global_batch * shape.seq_len
+        act = tokens * cfg.d_model * 2 * cfg.n_layers * 2  # fwd+bwd, bf16
+        return 4 * p + act          # read W (fwd+bwd), write/read grads
+    kv = kv_cache_bytes(cfg, shape)
+    if shape.phase == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        act = tokens * cfg.d_model * 2 * cfg.n_layers
+        return cfg.active_param_count() * 2 + kv + act
+    # decode: read all active weights + read the whole KV + write one row
+    return cfg.active_param_count() * 2 + kv
+
+
+def kv_cache_bytes(cfg: ModelConfig, shape) -> float:
+    tot = 0.0
+    for k in cfg.layer_pattern:
+        if k == "attn":
+            slots = shape.seq_len
+        elif k == "swa":
+            slots = min(cfg.sliding_window, shape.seq_len)
+        elif k == "rglru":
+            tot += cfg.n_groups * shape.global_batch * cfg.rnn_width * 4
+            continue
+        else:  # rwkv
+            hd = cfg.rwkv_head_size
+            tot += cfg.n_groups * shape.global_batch * \
+                (cfg.d_model // hd) * hd * hd * 4
+            continue
+        tot += cfg.n_groups * 2 * shape.global_batch * slots * \
+            cfg.n_kv_heads * cfg.head_dim * 2
+    return tot
+
+
+def analytic_collective_bytes(cfg: ModelConfig, shape, n_chips: int,
+                              model_size: int = 16) -> float:
+    """Per-chip collective traffic per step, from the sharding design of
+    DESIGN.md §6 *after* the §Perf optimizations.
+
+    train/prefill: FSDP weight gathers per traversal + grad reduce-scatter
+    + TP all-reduce of layer outputs + MoE all-to-all.
+    decode: weight-stationary — the weights never move; traffic is the
+    replicated token block's psums (qkv + FFN partials + expert combine).
+    """
+    p_shard = cfg.param_bytes() / n_chips
+    if shape.phase == "decode":
+        b = shape.global_batch
+        # per layer: psum of (B, D) x2 (attn out + FFN out) in f32, plus the
+        # token-block reshard, plus the MoE expert-combine psum
+        total = cfg.n_layers * 2 * b * cfg.d_model * 4
+        if cfg.is_moe:
+            total += cfg.n_moe_layers * (
+                2 * b * cfg.d_ff * 4            # pre-activation partials
+                + cfg.n_experts * b * cfg.d_model / model_size * 4)
+        return total
+
+    gather = cfg.param_bytes() / model_size  # per chip per traversal
+    passes = 3 if shape.phase == "train" else 1
+    total = gather * passes
+    if shape.phase == "train":
+        total += p_shard * 2        # grad reduce-scatter + opt sync
+    tokens_local = shape.global_batch * shape.seq_len / \
+        max(n_chips / model_size, 1)
+    total += 2 * tokens_local * cfg.d_model * 2 * cfg.n_layers * \
+        (2 if shape.phase == "train" else 1)
+    # MoE all-to-all: dispatch+return of local token buffers
+    if cfg.is_moe:
+        toks = shape.global_batch * shape.seq_len
+        total += 2 * 2 * toks * cfg.d_model * 2 * cfg.n_moe_layers / n_chips
+    return total
+
+
+# ---------------------------------------------------------------------------
+
+
+def load_records(mesh: str = "single") -> list:
+    out = []
+    d = RESULTS / mesh
+    if not d.exists():
+        return out
+    for f in sorted(d.glob("*.json")):
+        out.append(json.loads(f.read_text()))
+    return out
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    cfg = get_config(rec["arch"])
+    shape = INPUT_SHAPES[rec["shape"]]
+    chips = rec["n_devices"]
+    model_size = 16
+
+    mf = model_flops(cfg, shape)
+    mb = model_bytes(cfg, shape)
+    coll = analytic_collective_bytes(cfg, shape, chips, model_size)
+
+    t_compute = mf / (chips * PEAK_FLOPS)
+    t_memory = mb / (chips * HBM_BW)
+    t_coll = coll / ICI_BW          # already per-chip
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+
+    hlo_flops = rec.get("cost", {}).get("flops", 0.0)
+    hlo_bytes = rec.get("cost", {}).get("bytes accessed", 0.0)
+    parsed_coll = rec.get("collectives", {}).get("total_bytes", 0)
+
+    # CPU-backend artifact: XLA-CPU emulates every bf16 dot by converting
+    # both operands to f32; the converts of loop-invariant weights are
+    # hoisted, materializing a full f32 copy of the parameters (verified
+    # in EXPERIMENTS.md §Dry-run).  A real TPU has native bf16 MXU input —
+    # no such copy.  Corrected estimate subtracts 2x the bf16 weight bytes.
+    artifact = 0.0
+    if cfg.dtype == "bfloat16":
+        artifact = 2.0 * cfg.param_bytes() / chips
+    tpu_gib = rec["per_device_gib"] - artifact / 2 ** 30
+
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "phase": rec["phase"], "chips": chips,
+        "per_device_gib": rec["per_device_gib"],
+        "tpu_est_gib": tpu_gib,
+        "fits_16gib_tpu_est": bool(tpu_gib <= 16.0),
+        "fits_16gib": rec["fits_16gib"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_per_dev_bodyonce": hlo_flops,
+        "model_hlo_flop_ratio": (mf / chips) / hlo_flops if hlo_flops else
+        float("nan"),
+        "hlo_bytes_per_dev_bodyonce": hlo_bytes,
+        "parsed_collective_gib_bodyonce": parsed_coll / 2 ** 30,
+        "compile_s": rec.get("compile_s", 0.0),
+    }
+
+
+def full_table(mesh: str = "single") -> list:
+    rows = []
+    for rec in load_records(mesh):
+        r = roofline_row(rec)
+        if r:
+            rows.append(r)
+        elif rec.get("status") == "skip":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec["mesh"], "dominant": "SKIP",
+                         "skip_reason": rec.get("reason", "")})
+    return rows
+
+
+def print_table(mesh: str = "single"):
+    rows = full_table(mesh)
+    print(f"# Roofline — {mesh}-pod mesh "
+          f"({256 if mesh == 'single' else 512} chips of TPU v5e)")
+    hdr = (f"{'arch':28s} {'shape':12s} {'comp(ms)':>9s} {'mem(ms)':>9s} "
+           f"{'coll(ms)':>9s} {'bound':>10s} {'GiB raw':>8s} "
+           f"{'GiB tpu':>8s} {'fits':>5s}")
+    print(hdr)
+    for r in rows:
+        if r["dominant"] == "SKIP":
+            print(f"{r['arch']:28s} {r['shape']:12s} {'—':>9s} {'—':>9s} "
+                  f"{'—':>9s} {'SKIP':>10s}")
+            continue
+        print(f"{r['arch']:28s} {r['shape']:12s} "
+              f"{r['t_compute_s']*1e3:9.2f} {r['t_memory_s']*1e3:9.2f} "
+              f"{r['t_collective_s']*1e3:9.2f} {r['dominant']:>10s} "
+              f"{r['per_device_gib']:8.2f} {r['tpu_est_gib']:8.2f} "
+              f"{'yes' if r['fits_16gib_tpu_est'] else 'NO':>5s}")
+    return rows
+
+
+if __name__ == "__main__":
+    print_table("single")
+    print()
+    print_table("multi")

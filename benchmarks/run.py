@@ -1,0 +1,38 @@
+"""Run every benchmark; one function per paper table/figure.
+
+Prints ``name,value,derived`` CSV (per the repo scaffold convention) and
+the roofline tables.  ``python -m benchmarks.run [--skip-microbench]``.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    rows: list = []
+
+    from benchmarks import paper_figures, policy_tables
+    paper_figures.run(rows)
+    policy_tables.run(rows)
+
+    if "--skip-microbench" not in sys.argv:
+        from benchmarks import microbench
+        microbench.run(rows)
+
+    print("name,value,derived")
+    for name, val, derived in rows:
+        print(f"{name},{val:.4f},{derived}")
+
+    print()
+    from benchmarks import roofline
+    for mesh in ("single", "multi"):
+        rows_r = roofline.print_table(mesh)
+        n_ok = sum(1 for r in rows_r if r["dominant"] != "SKIP")
+        n_fit = sum(1 for r in rows_r
+                    if r["dominant"] != "SKIP" and r["fits_16gib_tpu_est"])
+        print(f"-> {n_ok} compiled, {n_fit} fit 16 GiB/chip, "
+              f"{len(rows_r) - n_ok} skipped (long-context policy)\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Train a ~small model for a few hundred steps on the synthetic LM stream
+(deliverable b: end-to-end training driver).
+
+    PYTHONPATH=src python examples/train_small.py [--steps 200]
+
+Exercises the full training substrate: model builder, flash-attention
+custom VJP, chunked cross-entropy, AdamW, gradient flow through the
+layer-group scan.  Loss should fall from ~ln(V) to near 0 on the
+structured stream.
+"""
+import argparse
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import make_lm_batches
+from repro.models import model as M
+from repro.training.optimizer import make_optimizer
+from repro.training.train_loop import train_loop
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=64)
+args = ap.parse_args()
+
+cfg = ModelConfig(name="train-small", arch_type="dense", n_layers=4,
+                  d_model=128, n_heads=4, n_kv_heads=2, d_ff=384,
+                  vocab_size=211, layer_pattern=("swa", "attn"),
+                  sliding_window=32, dtype="float32", remat=False)
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+n_params = sum(x.size for x in jax.tree.leaves(params))
+print(f"model: {n_params/1e6:.2f}M params, pattern {cfg.layer_pattern}")
+
+opt_init, _ = make_optimizer("adamw")
+data = make_lm_batches(args.batch, args.seq, cfg.vocab_size)
+params, _, log = train_loop(cfg, params, opt_init(params), data,
+                            args.steps, lr=2e-3,
+                            log_every=max(args.steps // 10, 1))
+for row in log:
+    print(f"step {row['step']:4d}  loss {row['loss']:.4f}")
+assert log[-1]["loss"] < log[0]["loss"] * 0.5, "did not learn"
+print("training OK: loss fell >2x")

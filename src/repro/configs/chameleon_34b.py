@@ -1,0 +1,19 @@
+"""Chameleon-34B [vlm] — early-fusion mixed-modal decoder (arXiv:2405.09818).
+
+Images are VQ-tokenized into the same discrete vocabulary as text (early
+fusion), so the backbone is a dense decoder with a 65536 vocab; the VQ-VAE
+image tokenizer is the stubbed modality frontend (``input_specs`` feeds
+token ids directly — image patches arrive as vocabulary entries).
+Chameleon uses query-key normalization internally; we keep the standard
+pre-norm GQA block (backbone-equivalent compute/memory footprint).
+"""
+from repro.configs.base import ATTN, ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b", arch_type="vlm",
+    n_layers=48, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=22016, vocab_size=65536,
+    layer_pattern=(ATTN,), rope_theta=10_000.0,
+    supports_long_context=False,
+    source="arXiv:2405.09818",
+)

@@ -1,0 +1,18 @@
+"""Gemma-3 12B [dense] — 5 local : 1 global attention, 128k context
+[hf:google/gemma-3-1b-pt family].
+
+Local layers use a 1024-token sliding window; every 6th layer is global.
+``long_500k`` runs: local layers keep only window KV, the 8 global layers
+hold the full 512k KV sharded over the mesh (DESIGN.md §5/§6).
+"""
+from repro.configs.base import ATTN, SWA, ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-12b", arch_type="dense",
+    n_layers=48, d_model=3840, n_heads=16, n_kv_heads=8,
+    d_ff=15360, vocab_size=262144,
+    layer_pattern=(SWA, SWA, SWA, SWA, SWA, ATTN), sliding_window=1024,
+    rope_theta=1_000_000.0,
+    supports_long_context=True,
+    source="hf:google/gemma-3-1b-pt",
+)

@@ -1,0 +1,17 @@
+"""Llama-3.1 405B [dense] — GQA, 128k vocab (arXiv:2407.21783).
+
+The largest assigned architecture: 810 GB of bf16 weights.  Training uses
+Adafactor (factored second moment) so optimizer state fits the per-chip
+HBM budget at 512-way sharding — AdamW would need ~19 GB/chip on a single
+pod (see DESIGN.md §6).
+"""
+from repro.configs.base import ATTN, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-405b", arch_type="dense",
+    n_layers=126, d_model=16384, n_heads=128, n_kv_heads=8,
+    d_ff=53248, vocab_size=128256,
+    layer_pattern=(ATTN,), rope_theta=500_000.0,
+    optimizer="adafactor", offload_carries=True,
+    source="arXiv:2407.21783",
+)

@@ -1,0 +1,21 @@
+"""Llama-4 Maverick 400B (17B active) [moe] — 128 experts top-1, early
+fusion [hf:meta-llama/Llama-4-Scout-17B-16E].
+
+Like the released Maverick, MoE layers interleave 1:1 with dense layers
+(24 MoE + 24 dense of the 48), which lands the total at ~400B with 128
+experts of d_ff=8192.  Early fusion: image patches arrive as tokens of the
+202k vocabulary (frontend stubbed).  Uses Adafactor for train_4k for the
+same HBM-budget reason as llama3-405b.
+"""
+from repro.configs.base import ATTN, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b", arch_type="moe",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8,
+    d_ff=8192, vocab_size=202048,
+    n_experts=128, top_k=1,
+    layer_pattern=(ATTN, ATTN), moe_pattern=(False, True),
+    rope_theta=500_000.0,
+    optimizer="adafactor", offload_carries=True,
+    source="hf:meta-llama/Llama-4-Scout-17B-16E",
+)

@@ -1,0 +1,10 @@
+"""Phi-3-medium 14B [dense] — RoPE + SwiGLU + GQA (arXiv:2404.14219)."""
+from repro.configs.base import ATTN, ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3-medium-14b", arch_type="dense",
+    n_layers=40, d_model=5120, n_heads=40, n_kv_heads=10,
+    d_ff=17920, vocab_size=100352,
+    layer_pattern=(ATTN,), rope_theta=10_000.0,
+    source="arXiv:2404.14219",
+)

@@ -1,0 +1,20 @@
+"""RWKV-6 "Finch" 7B [ssm] — attention-free, data-dependent decay
+(arXiv:2404.05892).
+
+No KV cache at all: per-layer state is a (heads, 64, 64) WKV matrix plus
+token-shift vectors, so every decode shape including 500k runs in O(1)
+state.  The paper's host-attention offload leg is inapplicable (noted in
+DESIGN.md §4); weight streaming and speculative decoding still apply —
+verification uses the recurrent state-stack rollback.
+"""
+from repro.configs.base import RWKV, ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b", arch_type="ssm",
+    n_layers=32, d_model=4096, n_heads=0, n_kv_heads=0,
+    d_ff=14336, vocab_size=65536,
+    layer_pattern=(RWKV,), rwkv_head_size=64,
+    head_dim=64,  # informational; attention-free
+    supports_long_context=True,
+    source="arXiv:2404.05892",
+)

@@ -1,0 +1,16 @@
+"""StarCoder2-7B [dense] — GQA + RoPE (arXiv:2402.19173).
+
+The released model uses a 4096-token sliding window and GELU MLP; the
+assignment line specifies the dense-GQA backbone, which we implement with
+global attention + SwiGLU-free (gelu) FFN per the model card.
+"""
+from repro.configs.base import ATTN, ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-7b", arch_type="dense",
+    n_layers=32, d_model=4608, n_heads=36, n_kv_heads=4,
+    d_ff=18432, vocab_size=49152,
+    layer_pattern=(ATTN,), rope_theta=1_000_000.0,
+    activation="gelu", norm="layernorm",
+    source="arXiv:2402.19173",
+)

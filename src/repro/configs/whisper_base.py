@@ -1,0 +1,24 @@
+"""Whisper-base [audio] — encoder-decoder with conv/mel frontend stubbed
+(arXiv:2212.04356).
+
+``input_specs`` provides precomputed frame embeddings (B, 1500, 512) in
+place of the mel-spectrogram + conv feature extractor; this module is the
+transformer that consumes them.  LayerNorm + GELU + learned/sinusoidal
+positions (no RoPE).  Decode shapes exercise the decoder with cross
+attention to the 1500-frame encoder output; whisper's design maximum is
+448 decoder positions, so the 500k long-context shape is skipped
+(DESIGN.md §5).
+"""
+from repro.configs.base import ATTN, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base", arch_type="audio",
+    n_layers=6, d_model=512, n_heads=8, n_kv_heads=8,
+    d_ff=2048, vocab_size=51865,
+    layer_pattern=(ATTN,),
+    use_rope=False, norm="layernorm", activation="gelu",
+    tie_embeddings=True,
+    encoder_decoder=True, n_encoder_layers=6, encoder_len=1500,
+    supports_long_context=False,
+    source="arXiv:2212.04356",
+)

@@ -1,0 +1,139 @@
+"""Interleaved Batch Pipeline (paper §4.1): dual-batch rotation.
+
+The paper runs two batches in anti-phase: in slot t_n the *target* verifies
+batch 1 while the *draft* generates candidates for batch 0; the roles swap
+in t_{n+1}.  On GPU this needs two processes + shared memory (paper App.
+A.2); in JAX the same concurrency is expressed as ONE fused jit step that
+contains both computations — XLA schedules the draft model's matmuls into
+the slack left by the target's streamed-weight copies (DESIGN.md §2).
+
+``InterleavedPipeline.step()`` therefore performs, per call:
+
+    verify(target, batch_V)   +   draft_generate(draft, batch_D)
+
+and swaps the roles afterwards.  A warm-up call drafts for batch 0 only
+(slot t_0 of the paper's Figure 4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.spec_decode import (draft_generate, greedy_acceptance,
+                                    rollback_draft)
+from repro.models import model as M
+
+
+@dataclass
+class BatchState:
+    """Per-interleaved-batch decoding state."""
+    target_cache: dict
+    draft_cache: dict
+    t_next: jax.Array            # (B,) last committed token (not yet fed)
+    drafts: jax.Array | None     # (B, m) candidates awaiting verification
+    draft_pendings: list | None  # rollback info for the draft steps
+    emitted: list                # python-side: list of (tokens, n_emitted)
+
+
+def fused_verify_and_draft(target_params, target_cfg: ModelConfig,
+                           draft_params, draft_cfg: ModelConfig,
+                           verify_state: dict, draft_state: dict,
+                           n_cand: int, mesh=None):
+    """The fused step: target verifies batch V's drafts while the draft
+    model generates candidates for batch D — one XLA program.
+
+    verify_state: {target_cache, t_next, drafts}
+    draft_state:  {draft_cache, t_next}
+    Returns (verify_out, draft_out) where verify_out carries acceptance
+    results and draft_out carries new candidates.
+    """
+    # --- target side: verify batch V
+    v_in = jnp.concatenate([verify_state["t_next"][:, None],
+                            verify_state["drafts"]], axis=1)
+    tlogits, tcache, tpend = M.decode(
+        target_params, target_cfg, verify_state["target_cache"], v_in, mesh)
+    a, nxt, n_commit = greedy_acceptance(verify_state["drafts"], tlogits)
+    tcache = M.commit(target_cfg, tcache, tpend, n_commit, n_cand + 1)
+
+    # --- draft side: generate for batch D (independent compute, same program)
+    drafts, dlogits, dcache, dpend = draft_generate(
+        draft_params, draft_cfg, draft_state["draft_cache"],
+        draft_state["t_next"], n_cand, mesh)
+
+    m = verify_state["drafts"].shape[1]
+    out = jnp.where(jnp.arange(m)[None, :] < a[:, None],
+                    verify_state["drafts"], 0)
+    out = jnp.concatenate([out, jnp.zeros_like(a[:, None])], axis=1)
+    out = jax.vmap(lambda row, i, t: row.at[i].set(t))(out, a, nxt)
+
+    verify_out = {"target_cache": tcache, "tokens": out, "n_emitted": a + 1,
+                  "t_next": nxt, "n_accept": a}
+    draft_out = {"drafts": drafts, "draft_cache": dcache,
+                 "pendings": dpend}
+    return verify_out, draft_out
+
+
+class InterleavedPipeline:
+    """Runs the dual-batch rotation until every sequence has ``gen_len``
+    tokens.  Pure orchestration — all heavy work happens in jitted steps."""
+
+    def __init__(self, target_params, target_cfg, draft_params, draft_cfg,
+                 n_cand: int, mesh=None):
+        self.tp, self.tcfg = target_params, target_cfg
+        self.dp, self.dcfg = draft_params, draft_cfg
+        self.n_cand = n_cand
+        self.mesh = mesh
+        self._fused = jax.jit(
+            fused_verify_and_draft,
+            static_argnames=("target_cfg", "draft_cfg", "n_cand", "mesh"))
+        self._draft_only = jax.jit(
+            draft_generate, static_argnames=("cfg", "n_cand", "mesh"))
+        self._rollback = jax.jit(
+            rollback_draft, static_argnames=("cfg",))
+
+    def run(self, states: list, gen_len: int, max_rounds: int = 10_000):
+        """states: two BatchState entries (prefilled).  Mutates/returns
+        them with ``emitted`` filled until each batch has gen_len tokens."""
+        s0, s1 = states
+        # warm-up (t_0 of Fig. 4): draft generates for batch 0
+        d, _, dc, pend = self._draft_only(self.dp, self.dcfg, s0.draft_cache,
+                                          s0.t_next, self.n_cand)
+        s0.drafts, s0.draft_cache, s0.draft_pendings = d, dc, pend
+
+        import numpy as np
+
+        def total(st):
+            """Guaranteed tokens so far = sum of per-round minima."""
+            return int(sum(np.min(np.asarray(n)) for _, n in st.emitted))
+
+        verify, gen = s0, s1
+        rounds = 0
+        while rounds < max_rounds:
+            if total(s0) >= gen_len and total(s1) >= gen_len:
+                break
+            vstate = {"target_cache": verify.target_cache,
+                      "t_next": verify.t_next, "drafts": verify.drafts}
+            dstate = {"draft_cache": gen.draft_cache, "t_next": gen.t_next}
+            vout, dout = self._fused(self.tp, self.tcfg, self.dp, self.dcfg,
+                                     vstate, dstate, self.n_cand, self.mesh)
+            # batch V: commit + roll its draft cache back to acceptance
+            verify.target_cache = vout["target_cache"]
+            verify.draft_cache = self._rollback(
+                self.dcfg, verify.draft_cache, verify.draft_pendings,
+                vout["n_emitted"])
+            verify.t_next = vout["t_next"]
+            verify.drafts, verify.draft_pendings = None, None
+            verify.emitted.append((np.asarray(vout["tokens"]),
+                                   np.asarray(vout["n_emitted"])))
+            # batch D: stash fresh drafts
+            gen.drafts = dout["drafts"]
+            gen.draft_cache = dout["draft_cache"]
+            gen.draft_pendings = dout["pendings"]
+            # rotate roles (t_{n+1} of Fig. 4)
+            verify, gen = gen, verify
+            rounds += 1
+        return s0, s1, rounds

@@ -1,0 +1,122 @@
+"""Host<->HBM weight streaming: the TPU-native realization of the paper's
+PCIe offloading (DESIGN.md §2).
+
+* Target weights at rest live in ``pinned_host`` memory (the analogue of
+  the paper's CPU DRAM tier); per layer-group slabs are copied into device
+  memory *inside the jit'd step* via ``jax.device_put`` — XLA issues these
+  as asynchronous copies that overlap with compute, which is exactly the
+  paper's prefetch pipeline without any host threading.
+* The KV cache may also live host-side, with decode attention computed
+  under ``jax.experimental.compute_on('device_host')`` — the analogue of
+  the paper's CPU-attention leg (§4.1.2).
+* The draft model stays fully device-resident (the paper's "low-yield
+  memory repurposing").
+
+On this CPU-only container the memory spaces are both host RAM, but the
+placement logic, copy schedule, and compiled HLO (with explicit
+``memory_kind`` annotations) are the real thing.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.transformer import (forward_decoder, init_cache,
+                                      logits_from_hidden)
+
+try:
+    from jax.experimental.compute_on import compute_on
+    HAS_COMPUTE_ON = True
+except ImportError:  # pragma: no cover
+    HAS_COMPUTE_ON = False
+
+
+def _sharding(memory_kind: str, device=None):
+    device = device or jax.devices()[0]
+    return jax.sharding.SingleDeviceSharding(device, memory_kind=memory_kind)
+
+
+def put_host(tree):
+    """Move a pytree to pinned host memory (the offload tier)."""
+    return jax.device_put(tree, _sharding("pinned_host"))
+
+
+def put_device(tree):
+    return jax.device_put(tree, _sharding("device"))
+
+
+class OffloadedModel:
+    """A model whose layer-group weights stream from host per step.
+
+    ``params_host`` keeps ``layers`` in pinned host memory; embeddings +
+    final norm (small, high reuse) stay device-resident, mirroring the
+    placement plan's pinning priorities.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: dict,
+                 host_kv: bool = False):
+        self.cfg = cfg
+        self.host_kv = host_kv and HAS_COMPUTE_ON
+        resident = {k: v for k, v in params.items() if k != "layers"}
+        self.params_resident = put_device(resident)
+        self.layers_host = put_host(params["layers"])
+
+    # -- streamed forward ---------------------------------------------------
+
+    def _assemble(self, layers_dev):
+        p = dict(self.params_resident)
+        p["layers"] = layers_dev
+        return p
+
+    @partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
+    def _decode_jit(self, layers_dev, cache, tokens):
+        params = self._assemble(layers_dev)
+        logits, cache, pendings = M.decode(params, self.cfg, cache, tokens)
+        return logits, cache, pendings
+
+    def stream_layers(self):
+        """host->device copy of the layer stack (the per-step stream).
+
+        Dispatch is asynchronous; compute on previously-streamed data
+        overlaps with this copy, which is the paper's prefetch.
+        """
+        return put_device(self.layers_host)
+
+    def decode(self, cache, tokens):
+        layers_dev = self.stream_layers()
+        return self._decode_jit(layers_dev, cache, tokens)
+
+    def prefill(self, tokens, cache, encoder_frames=None):
+        layers_dev = self.stream_layers()
+        params = self._assemble(layers_dev)
+        return jax.jit(M.prefill, static_argnums=(1,))(
+            params, self.cfg, tokens, cache)
+
+    def streamed_bytes(self) -> int:
+        return sum(x.size * x.dtype.itemsize
+                   for x in jax.tree.leaves(self.layers_host))
+
+
+# ---------------------------------------------------------------------------
+# host-offloaded decode attention (the CPU-attention analogue)
+
+
+def host_attention_direct(q, k, v, mask, scale):
+    """Decode attention computed in host memory space.
+
+    Used by the single-chip offload engine when the KV cache is
+    host-resident: the score/softmax/PV chain executes under
+    ``compute_on('device_host')`` so only q (tiny) and the output cross
+    the host link — the KV cache itself never moves, exactly like the
+    paper's CPU attention.
+    """
+    from repro.models.attention import attention_direct
+    if not HAS_COMPUTE_ON:
+        return attention_direct(q, k, v, mask, scale)
+    with compute_on("device_host"):
+        out = attention_direct(q, k, v, mask, scale)
+    return out

@@ -1,0 +1,157 @@
+"""SpecOffloadEngine — the paper's full system (§3): offline placement +
+online planning + the two-phase interleaved pipeline.
+
+Usage (see examples/serve_spec_offload.py)::
+
+    engine = SpecOffloadEngine(target_cfg, draft_cfg, hw=ENV1)
+    engine.load(target_params, draft_params)
+    out = engine.generate(prompts, gen_len=64)
+
+Phases
+------
+* **Prefill** (§4.1.1) — zig-zag microbatching: the prompt batch is split
+  into ``bs_prefill`` chunks; each chunk runs a full prefill while the
+  engine keeps only the streamed working set resident.  KV is then handed
+  to the decode phase (host tier in the offloaded configuration).
+* **Decode** (§4.1.2) — dual-batch rotation via
+  :class:`repro.core.interleave.InterleavedPipeline`.
+
+The engine is hardware-agnostic: on the CPU container it runs the real
+algorithm end-to-end at small scale; placement/planner decisions use the
+configured :class:`HardwareSpec`.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.interleave import BatchState, InterleavedPipeline
+from repro.core.placement import PlacementPlan, plan_placement
+from repro.core.planner import ParaSpecPlanner, Policy, Workload
+from repro.models import model as M
+from repro.models.transformer import init_cache
+from repro.sim.hardware import ENV1, HardwareSpec
+
+
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray            # (B, gen_len)
+    rounds: int
+    accept_counts: list
+    policy: Policy
+    placement: PlacementPlan
+
+
+class SpecOffloadEngine:
+    def __init__(self, target_cfg: ModelConfig, draft_cfg: ModelConfig,
+                 hw: HardwareSpec = ENV1, policy: Policy | None = None,
+                 mesh=None):
+        self.tcfg = target_cfg
+        self.dcfg = draft_cfg
+        self.hw = hw
+        self.mesh = mesh
+        self.policy = policy
+        self.placement = plan_placement(target_cfg, draft_cfg, hw)
+        self.tp = None
+        self.dp = None
+        self._prefill = jax.jit(M.prefill, static_argnums=(1,),
+                                static_argnames=("mesh",))
+
+    # ------------------------------------------------------------------
+    def load(self, target_params, draft_params):
+        self.tp = target_params
+        self.dp = draft_params
+
+    def init_from_seed(self, seed: int = 0):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        self.load(M.init_params(self.tcfg, k1), M.init_params(self.dcfg, k2))
+
+    def plan(self, prompt_len: int, gen_len: int,
+             accept_prob: float = 0.7) -> Policy:
+        if self.policy is not None:
+            return self.policy
+        planner = ParaSpecPlanner(self.tcfg, self.dcfg, self.hw)
+        rep = planner.search(Workload(prompt_len, gen_len, accept_prob))
+        self.policy = rep.policy
+        return self.policy
+
+    # ------------------------------------------------------------------
+    def _prefill_zigzag(self, params, cfg, tokens: jax.Array,
+                        bs_prefill: int, max_len: int):
+        """Microbatched prefill (zig-zag §4.1.1): the batch is processed in
+        ``bs_prefill`` chunks so only one chunk's activations + KV are live
+        on the accelerator at a time; chunk caches are then concatenated
+        (the paper ships them to host memory between chunks)."""
+        b = tokens.shape[0]
+        last_logits, caches = [], []
+        for i in range(0, b, bs_prefill):
+            chunk = tokens[i:i + bs_prefill]
+            c = init_cache(cfg, chunk.shape[0], max_len)
+            lg, c = self._prefill(params, cfg, chunk, c)
+            last_logits.append(lg)
+            caches.append(c)
+        if len(caches) == 1:
+            return last_logits[0], caches[0]
+        return jnp.concatenate(last_logits, 0), _concat_caches(caches)
+
+    def generate(self, prompts: jax.Array, gen_len: int, n_cand: int = 4,
+                 max_len: int | None = None) -> GenerationResult:
+        """prompts (B, L) int32, B split into the two interleaved batches."""
+        assert self.tp is not None, "call load()/init_from_seed() first"
+        b, length = prompts.shape
+        pol = self.policy or Policy(bs_prefill=max(1, b // 2),
+                                    bs_decode=max(1, b // 2),
+                                    bs_draft=max(1, b // 2), n_cand=n_cand)
+        m = pol.n_cand
+        max_len = max_len or (length + gen_len + 3 * (m + 1) + 4)
+
+        half = b // 2
+        batches = [prompts[:half], prompts[half:]]
+        states = []
+        for bt in batches:
+            lg, tc = self._prefill_zigzag(self.tp, self.tcfg, bt,
+                                          pol.bs_prefill, max_len)
+            _, dc = self._prefill_zigzag(self.dp, self.dcfg, bt,
+                                         pol.bs_prefill, max_len)
+            t0 = jnp.argmax(lg, -1)
+            states.append(BatchState(target_cache=tc, draft_cache=dc,
+                                     t_next=t0, drafts=None,
+                                     draft_pendings=None,
+                                     emitted=[(np.asarray(t0)[:, None], 1)]))
+
+        pipe = InterleavedPipeline(self.tp, self.tcfg, self.dp, self.dcfg,
+                                   m, self.mesh)
+        s0, s1, rounds = pipe.run(states, gen_len)
+
+        out = np.zeros((b, gen_len), np.int32)
+        accepts = []
+        for bi, st in enumerate((s0, s1)):
+            rows = np.zeros((batches[bi].shape[0], 0), np.int32)
+            fills = [list() for _ in range(batches[bi].shape[0])]
+            for toks, n in st.emitted:
+                toks = np.asarray(toks)
+                n = np.asarray(n) + np.zeros(toks.shape[0], np.int32)
+                for r in range(toks.shape[0]):
+                    fills[r].extend(toks[r, :int(n[r])].tolist())
+                if toks.shape[1] > 1:
+                    accepts.append(n - 1)
+            for r, f in enumerate(fills):
+                row = (f + [0] * gen_len)[:gen_len]
+                out[bi * half + r] = row
+            del rows
+        return GenerationResult(out, rounds, accepts,
+                                pol, self.placement)
+
+
+def _concat_caches(caches):
+    """Concat per-chunk caches over the batch axis (axis 1 for stacked
+    layer leaves, axis 0 for 'pos')."""
+    layers = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1),
+                          *[c["layers"] for c in caches])
+    pos = jnp.concatenate([c["pos"] for c in caches], axis=0)
+    return {"layers": layers, "pos": pos}

@@ -1,0 +1,235 @@
+"""Speculative decoding: draft-then-verify with batched per-sequence
+acceptance, plus the paper's acceptance model (Appendix A.1).
+
+Round protocol (uniform shapes — no per-sequence catch-up feeds)
+----------------------------------------------------------------
+Invariant: both caches hold positions [0, P); ``t_next`` (B,) is the last
+committed token, not yet fed to either model.
+
+1. **Draft** feeds ``n_cand + 1`` tokens one step at a time:
+   ``x_0 = t_next``, ``x_i = d_i`` (its own greedy/sampled prediction),
+   producing drafts ``d_1..d_m`` (m = n_cand).  The final feed of ``d_m``
+   produces no draft but commits it, so a fully-accepted round needs no
+   catch-up next round.  Per-step pendings are kept for rollback.
+2. **Target** verifies ``[t_next, d_1..d_m]`` in one forward (m+1 positions),
+   yielding greedy predictions ``g_0..g_m``.
+3. **Accept** ``a = |longest prefix with d_{i+1} == g_i|``; commit ``a+1``
+   input tokens on the target, roll the draft back to ``a+1`` kept inputs,
+   and emit ``a+1`` new tokens (``d_1..d_a`` plus bonus ``g_a``).  This
+   matches the paper: 1..n_cand+1 tokens per round, E[n] per Eq. (12).
+
+Losslessness: with greedy acceptance the emitted stream equals the target
+model's own greedy decoding, token for token (tested in
+``tests/test_spec_decode.py``).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+# ---------------------------------------------------------------------------
+# the paper's acceptance model (Appendix A.1, Eqs. 10-12)
+
+
+def acceptance_pmf(p: float, n_cand: int) -> jnp.ndarray:
+    """P[n_generated = k] for k = 1..n_cand+1 under i.i.d. acceptance p."""
+    ks = jnp.arange(1, n_cand + 2)
+    pmf = p ** (ks - 1) * (1 - p)
+    pmf = pmf.at[-1].set(p ** n_cand)
+    return pmf
+
+
+def expected_generated(p: float, n_cand: int) -> float:
+    """E[n_generated] under the paper's acceptance pmf (Eqs. 10-11).
+
+    ERRATUM: the paper's closed form (Eq. 12) is algebraically inconsistent
+    with its own pmf — summing k * P[k] over Eqs. (10)-(11) gives the
+    truncated-geometric mean ``(1 - p^{n+1}) / (1 - p)`` (Monte-Carlo
+    verified in tests/test_spec_decode.py; this also matches Leviathan et
+    al. 2023 Eq. 1).  We implement the correct sum.
+    """
+    if p >= 1.0:
+        return float(n_cand + 1)
+    return float((1.0 - p ** (n_cand + 1)) / (1.0 - p))
+
+
+def expected_generated_paper_eq12(p: float, n_cand: int) -> float:
+    """The paper's Eq. (12) as printed — kept for the erratum comparison."""
+    if p >= 1.0:
+        return float(n_cand + 1)
+    return float((n_cand * p ** (n_cand + 2)
+                  - (n_cand + 1) * p ** (n_cand + 1) + 1) / (1 - p))
+
+
+# ---------------------------------------------------------------------------
+# acceptance rules
+
+
+def greedy_acceptance(drafts: jax.Array, target_logits: jax.Array):
+    """Greedy (lossless) acceptance.
+
+    drafts (B, m); target_logits (B, m+1, V) for inputs [t_next, d_1..d_m].
+    Returns (n_accept (B,) in [0,m], next_token (B,), n_commit (B,) = a+1).
+    """
+    g = jnp.argmax(target_logits, axis=-1).astype(drafts.dtype)  # (B, m+1)
+    m = drafts.shape[1]
+    match = drafts == g[:, :m]                                   # d_{i+1}==g_i
+    prefix = jnp.cumprod(match.astype(jnp.int32), axis=1)
+    a = prefix.sum(axis=1)                                       # (B,)
+    next_token = jnp.take_along_axis(g, a[:, None], axis=1)[:, 0]
+    return a, next_token, a + 1
+
+
+def sampled_acceptance(drafts: jax.Array, draft_logits: jax.Array,
+                       target_logits: jax.Array, key,
+                       temperature: float = 1.0):
+    """Leviathan et al. (2023) lossless *sampling* acceptance.
+
+    Accept d_i with prob min(1, p_t(d_i)/p_d(d_i)); on first rejection,
+    resample from max(0, p_t - p_d) normalized.  Returns
+    (n_accept, next_token, n_commit).
+    """
+    b, m = drafts.shape
+    pt = jax.nn.softmax(target_logits[:, :m] / temperature, axis=-1)
+    pd = jax.nn.softmax(draft_logits / temperature, axis=-1)
+    di = drafts[..., None]
+    pt_d = jnp.take_along_axis(pt, di, axis=-1)[..., 0]
+    pd_d = jnp.take_along_axis(pd, di, axis=-1)[..., 0]
+    k_acc, k_res, k_bonus = jax.random.split(key, 3)
+    u = jax.random.uniform(k_acc, (b, m))
+    accept = u < jnp.minimum(1.0, pt_d / jnp.maximum(pd_d, 1e-20))
+    prefix = jnp.cumprod(accept.astype(jnp.int32), axis=1)
+    a = prefix.sum(axis=1)
+
+    # residual distribution at the first rejected position
+    idx = jnp.minimum(a, m - 1)
+    pt_rej = jnp.take_along_axis(pt, idx[:, None, None], axis=1)[:, 0]
+    pd_rej = jnp.take_along_axis(pd, idx[:, None, None], axis=1)[:, 0]
+    residual = jnp.maximum(pt_rej - pd_rej, 0.0)
+    residual = residual / jnp.maximum(residual.sum(-1, keepdims=True), 1e-20)
+    resampled = jax.random.categorical(k_res, jnp.log(residual + 1e-20))
+
+    # fully-accepted rows sample the bonus position from the target
+    bonus_logits = target_logits[:, m] / temperature
+    bonus = jax.random.categorical(k_bonus, bonus_logits)
+    next_token = jnp.where(a == m, bonus, resampled).astype(drafts.dtype)
+    return a, next_token, a + 1
+
+
+# ---------------------------------------------------------------------------
+# draft generation with rollback support
+
+
+def draft_generate(params, cfg: ModelConfig, cache, t_next: jax.Array,
+                   n_cand: int, mesh=None):
+    """Generate ``n_cand`` greedy draft tokens, feeding n_cand+1 inputs.
+
+    Returns (drafts (B, m), draft_logits (B, m, V), cache, step_pendings).
+    The cache has all n_cand+1 inputs written (pos advanced); roll back with
+    :func:`rollback_draft`.
+    """
+    b = t_next.shape[0]
+    tok = t_next[:, None]
+    drafts, dlogits, step_pendings = [], [], []
+    for i in range(n_cand + 1):
+        logits, cache, pend = M.decode(params, cfg, cache, tok, mesh)
+        cache = {"layers": cache["layers"], "pos": cache["pos"] + 1}
+        step_pendings.append(pend)
+        if i < n_cand:
+            tok = jnp.argmax(logits[:, 0], axis=-1).astype(tok.dtype)[:, None]
+            drafts.append(tok[:, 0])
+            dlogits.append(logits[:, 0])
+    return (jnp.stack(drafts, axis=1), jnp.stack(dlogits, axis=1), cache,
+            step_pendings)
+
+
+def rollback_draft(cfg: ModelConfig, cache, step_pendings, n_keep):
+    """Rewind the draft cache to keep only the first ``n_keep`` (B,) of the
+    ``len(step_pendings)`` single-token steps written by draft_generate."""
+    m = len(step_pendings)
+    nk = jnp.asarray(n_keep, jnp.int32)
+    pos0 = cache["pos"] - m
+    new_layers = list(cache["layers"])
+    for li, kind in enumerate(cfg.layer_pattern):
+        if kind == "attn":
+            continue  # full cache: stale rows beyond pos are invisible
+        if kind == "swa":
+            for i, pend in enumerate(step_pendings):
+                saved = pend[li]["saved"]
+                if not saved:
+                    continue
+                keep_i = (i < nk).astype(jnp.int32)
+                fix = jax.vmap(
+                    lambda cc, sv, p=pos0 + i, k=keep_i:
+                    _restore_step(cc, sv, p, k, cfg.sliding_window))
+                new_layers[li] = fix(new_layers[li],
+                                     jax.tree.map(lambda x: x, saved))
+        else:  # recurrent: pick the state after n_keep steps
+            # stacks: step i holds [state_after_i, state_after_i+1]
+            stacks = [p[li]["stack"] for p in step_pendings]
+            first = stacks[0]
+            posts = [jax.tree.map(lambda s: s[:, :, 1], st) for st in stacks]
+            pre = jax.tree.map(lambda s: s[:, :, 0], first)
+            seq = jax.tree.map(
+                lambda p0, *ps: jnp.concatenate(
+                    [p0[:, :, None]] + [x[:, :, None] for x in ps], axis=2),
+                pre, *posts)  # (G, B, m+1, ...)
+            sel = _select_stacked(cfg, kind)
+            new_layers[li] = jax.vmap(lambda st: sel(st, nk))(seq)
+    return {"layers": tuple(new_layers), "pos": pos0 + nk}
+
+
+def _restore_step(cache_kv, saved, pos, keep, window):
+    from repro.models.attention import restore_rejected_rows
+    return restore_rejected_rows(cache_kv, saved, pos, keep, window)
+
+
+def _select_stacked(cfg, kind):
+    from repro.models import rglru as rglru_lib
+    from repro.models import rwkv as rwkv_lib
+    return (rglru_lib.select_rglru_state if kind == "rglru"
+            else rwkv_lib.select_rwkv_state)
+
+
+# ---------------------------------------------------------------------------
+# one full speculative round (jit-friendly)
+
+
+def spec_round(target_params, target_cfg: ModelConfig, target_cache,
+               draft_params, draft_cfg: ModelConfig, draft_cache,
+               t_next: jax.Array, n_cand: int, mesh=None, key=None,
+               sample: bool = False):
+    """One draft-then-verify round for one batch.
+
+    Returns dict with: tokens (B, m+1) — the m+1 candidate output slots
+    (d_1..d_m, bonus); n_emitted (B,) in [1, m+1] — how many of them are
+    valid; t_next (B,); updated caches.
+    """
+    drafts, dlogits, draft_cache, pendings = draft_generate(
+        draft_params, draft_cfg, draft_cache, t_next, n_cand, mesh)
+
+    verify_in = jnp.concatenate([t_next[:, None], drafts], axis=1)
+    tlogits, target_cache, tpend = M.decode(
+        target_params, target_cfg, target_cache, verify_in, mesh)
+
+    if sample:
+        a, nxt, n_commit = sampled_acceptance(drafts, dlogits, tlogits, key)
+    else:
+        a, nxt, n_commit = greedy_acceptance(drafts, tlogits)
+
+    target_cache = M.commit(target_cfg, target_cache, tpend, n_commit,
+                            n_cand + 1)
+    draft_cache = rollback_draft(draft_cfg, draft_cache, pendings, n_commit)
+
+    # output slots: accepted drafts then the bonus token at slot ``a``
+    out = jnp.where(jnp.arange(n_cand)[None, :] < a[:, None], drafts, 0)
+    out = jnp.concatenate([out, jnp.zeros_like(a[:, None])], axis=1)
+    out = jax.vmap(lambda row, i, t: row.at[i].set(t))(out, a, nxt)
+    return {"tokens": out, "n_emitted": a + 1, "t_next": nxt,
+            "target_cache": target_cache, "draft_cache": draft_cache,
+            "n_accept": a}

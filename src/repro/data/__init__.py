@@ -1,0 +1,2 @@
+from repro.data.pipeline import (TokenDataset, make_lm_batches,
+                                 synthetic_dataset)

@@ -1,0 +1,119 @@
+"""Pallas TPU flash-decode: the *verification* attention of SpecOffload.
+
+The target model verifies m = n_cand+1 (<= 16) query tokens per sequence
+against a long KV cache — a skinny-q attention that is pure KV-bandwidth.
+Tiling: grid = (batch*kv_heads, Skv/block_k); each program holds the full
+(g*m, d) query tile for its KV head group in VMEM (g*m is tiny) and streams
+(block_k, d) KV tiles from HBM, accumulating online-softmax state in VMEM
+scratch.  This is the per-step hot spot of the decode phase (§4.1.2).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, lens_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, block_k: int, n_kv_blocks: int, q_offset_from_len,
+            window: int | None):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                  # (gm, d) flattened
+    k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    length = lens_ref[0]                              # valid cache length
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    # q rows are (g, m) flattened; row r is token r % m, at logical
+    # position length - m + (r % m)
+    m_tokens = q_offset_from_len
+    q_tok = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) % m_tokens
+    q_pos = length - m_tokens + q_tok
+    ok = (k_pos <= q_pos) & (k_pos < length)
+    if window is not None:
+        ok = ok & (k_pos > q_pos - window)
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev, l_prev = m_scr[...], l_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_new = l_prev * corr + p.sum(axis=-1, keepdims=True)
+    v = v_ref[0].astype(jnp.float32)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _fin():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array, *, scale: float | None = None,
+                     window: int | None = None, block_k: int = 256,
+                     interpret: bool = False) -> jax.Array:
+    """Verify-attention against a cache.
+
+    q (B, Hq, m, d) — the m new tokens (already written into the cache at
+    positions [len-m, len)); k/v (B, Hkv, S, d) cache; lengths (B,) valid
+    cache length per sequence (= pos + m).  Causal within the m new tokens.
+    Returns (B, Hq, m, d).
+    """
+    b, hq, m, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = d ** -0.5 if scale is None else scale
+
+    skv_p = math.ceil(skv / block_k) * block_k
+    if skv_p != skv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
+    nk = skv_p // block_k
+
+    # flatten (g, m) into one q tile per KV head
+    qf = (q.reshape(b, hkv, g, m, d).reshape(b * hkv, g * m, d))
+    kf = k.reshape(b * hkv, skv_p, d)
+    vf = v.reshape(b * hkv, skv_p, d)
+    lens = jnp.repeat(lengths.astype(jnp.int32), hkv)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, block_k=block_k, n_kv_blocks=nk,
+        q_offset_from_len=m, window=window)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, g * m, d), lambda bh, ki: (bh, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, ki: (bh, ki, 0)),
+            pl.BlockSpec((1,), lambda bh, ki: (bh,),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, g * m, d), lambda bh, ki: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hkv, g * m, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g * m, 1), jnp.float32),
+            pltpu.VMEM((g * m, 1), jnp.float32),
+            pltpu.VMEM((g * m, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf, lens)
+    return out.reshape(b, hkv, g, m, d).reshape(b, hq, m, d)

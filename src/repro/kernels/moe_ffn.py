@@ -1,0 +1,83 @@
+"""Pallas TPU grouped MoE FFN: act(buf @ Wg) * (buf @ Wu) @ Wd per expert.
+
+The expert FFN is the paper's streamed unit (Mixtral experts) and the bulk
+of MoE decode FLOPs.  Tiling: grid = (E, C/block_c, F/block_f); each program
+computes a (block_c, block_f) SwiGLU tile and accumulates its down-projected
+(block_c, D) contribution in VMEM scratch — the (E, C, F) hidden tensor
+never exists.  block_f is a 128-multiple for the MXU; D stays whole in VMEM
+((block_c, D) f32 accumulator).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _act(h, activation: str):
+    if activation == "swiglu":
+        return jax.nn.silu(h)
+    if activation in ("gelu", "geglu"):
+        return jax.nn.gelu(h)
+    raise ValueError(activation)
+
+
+def _kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref, acc_scr, *,
+            activation: str, n_f_blocks: int):
+    fi = pl.program_id(2)
+
+    @pl.when(fi == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # (bc, D)
+    wg = wg_ref[0].astype(jnp.float32)        # (D, bf)
+    wu = wu_ref[0].astype(jnp.float32)
+    h = _act(x @ wg, activation) * (x @ wu)   # (bc, bf)
+    wd = wd_ref[0].astype(jnp.float32)        # (bf, D)
+    acc_scr[...] += h @ wd
+
+    @pl.when(fi == n_f_blocks - 1)
+    def _fin():
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+
+
+def moe_ffn(buf: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+            w_down: jax.Array, *, activation: str = "swiglu",
+            block_c: int = 128, block_f: int = 512,
+            interpret: bool = False) -> jax.Array:
+    """buf (E, C, D); w_gate/w_up (E, D, F); w_down (E, F, D) -> (E, C, D)."""
+    e, c, d = buf.shape
+    f = w_gate.shape[2]
+    c_p = math.ceil(c / block_c) * block_c
+    f_p = math.ceil(f / block_f) * block_f
+    if c_p != c:
+        buf = jnp.pad(buf, ((0, 0), (0, c_p - c), (0, 0)))
+    if f_p != f:
+        w_gate = jnp.pad(w_gate, ((0, 0), (0, 0), (0, f_p - f)))
+        w_up = jnp.pad(w_up, ((0, 0), (0, 0), (0, f_p - f)))
+        w_down = jnp.pad(w_down, ((0, 0), (0, f_p - f), (0, 0)))
+    ncb, nfb = c_p // block_c, f_p // block_f
+
+    kernel = functools.partial(_kernel, activation=activation,
+                               n_f_blocks=nfb)
+    out = pl.pallas_call(
+        kernel,
+        grid=(e, ncb, nfb),
+        in_specs=[
+            pl.BlockSpec((1, block_c, d), lambda ei, ci, fi: (ei, ci, 0)),
+            pl.BlockSpec((1, d, block_f), lambda ei, ci, fi: (ei, 0, fi)),
+            pl.BlockSpec((1, d, block_f), lambda ei, ci, fi: (ei, 0, fi)),
+            pl.BlockSpec((1, block_f, d), lambda ei, ci, fi: (ei, fi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, d),
+                               lambda ei, ci, fi: (ei, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, c_p, d), buf.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, d), jnp.float32)],
+        interpret=interpret,
+    )(buf, w_gate, w_up, w_down)
+    return out[:, :c]

@@ -1,0 +1,56 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On a real TPU these dispatch the compiled kernels; on the CPU container
+``interpret=True`` executes the kernel bodies in Python for correctness
+validation (the repo-wide convention; see DESIGN.md §7).  ``INTERPRET``
+defaults to True when no TPU is present.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels import (decode_attention as _da, flash_attention as _fa,
+                           moe_ffn as _mf, rglru_scan as _rg, wkv6 as _wk)
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("scale", "causal", "window", "block_q",
+                                   "block_k", "interpret"))
+def flash_attention(q, k, v, *, scale=None, causal=True, window=None,
+                    block_q=128, block_k=128, interpret=None):
+    interpret = INTERPRET if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, scale=scale, causal=causal,
+                               window=window, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("scale", "window", "block_k", "interpret"))
+def decode_attention(q, k, v, lengths, *, scale=None, window=None,
+                     block_k=256, interpret=None):
+    interpret = INTERPRET if interpret is None else interpret
+    return _da.decode_attention(q, k, v, lengths, scale=scale, window=window,
+                                block_k=block_k, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("activation", "block_c", "block_f",
+                                   "interpret"))
+def moe_ffn(buf, w_gate, w_up, w_down, *, activation="swiglu", block_c=128,
+            block_f=512, interpret=None):
+    interpret = INTERPRET if interpret is None else interpret
+    return _mf.moe_ffn(buf, w_gate, w_up, w_down, activation=activation,
+                       block_c=block_c, block_f=block_f, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_w", "interpret"))
+def rglru_scan(a, gated, h0, *, block_w=256, interpret=None):
+    interpret = INTERPRET if interpret is None else interpret
+    return _rg.rglru_scan(a, gated, h0, block_w=block_w, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def wkv6(r, k, v, w, u, s0, *, interpret=None):
+    interpret = INTERPRET if interpret is None else interpret
+    return _wk.wkv6(r, k, v, w, u, s0, interpret=interpret)

@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are small, obviously-correct implementations — the kernels' tests
+sweep shapes/dtypes and assert_allclose against them.  They intentionally
+materialize full score matrices etc. (oracle clarity over efficiency).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, scale=None, causal=True, window=None):
+    """q (B,Hq,Sq,d), k/v (B,Hkv,Skv,d) -> (B,Hq,Sq,d)."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = d ** -0.5 if scale is None else scale
+    qg = q.reshape(b, hkv, g, sq, d).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32)) * scale
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(skv)[None, :]
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= kp > qp - window
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lengths, *, scale=None, window=None):
+    """q (B,Hq,m,d); k/v (B,Hkv,S,d); lengths (B,). Causal over the m new
+    tokens at positions [len-m, len)."""
+    b, hq, m, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = d ** -0.5 if scale is None else scale
+    qg = q.reshape(b, hkv, g, m, d).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32)) * scale
+    kp = jnp.arange(skv)[None, None, :]
+    qp = (lengths[:, None, None] - m
+          + jnp.arange(m)[None, :, None])            # (B, m, 1)
+    ok = (kp <= qp) & (kp < lengths[:, None, None])
+    if window is not None:
+        ok &= kp > qp - window
+    s = jnp.where(ok[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, m, d).astype(q.dtype)
+
+
+def moe_ffn_ref(buf, w_gate, w_up, w_down, *, activation="swiglu"):
+    act = jax.nn.silu if activation == "swiglu" else jax.nn.gelu
+    buff = buf.astype(jnp.float32)
+    h = act(jnp.einsum("ecd,edf->ecf", buff, w_gate.astype(jnp.float32)))
+    h = h * jnp.einsum("ecd,edf->ecf", buff, w_up.astype(jnp.float32))
+    out = jnp.einsum("ecf,efd->ecd", h, w_down.astype(jnp.float32))
+    return out.astype(buf.dtype)
+
+
+def rglru_scan_ref(a, gated, h0):
+    def step(h, inp):
+        a_t, g_t = inp
+        h = a_t * h + g_t
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, (jnp.swapaxes(a, 0, 1),
+                                    jnp.swapaxes(gated, 0, 1)))
+    return jnp.swapaxes(hs, 0, 1)
+
+
+def wkv6_ref(r, k, v, w, u, s0):
+    """r/k/v/w (B,H,S,hd) f32; u (H,hd); s0 (B,H,hd,hd)."""
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                     # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhi,bhij->bhj", r_t,
+                       S + u[None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, y
+
+    sw = lambda z: jnp.swapaxes(z, 0, 2).swapaxes(1, 2)  # (B,H,S,..)->(S,B,H,..)
+    S, yT = jax.lax.scan(step, s0, (sw(r), sw(k), sw(v), sw(w)))
+    y = jnp.swapaxes(jnp.swapaxes(yT, 0, 1), 1, 2)       # -> (B,H,S,hd)
+    return y, S

@@ -1,0 +1,79 @@
+"""Pallas TPU RWKV-6 WKV recurrence (data-dependent decay).
+
+Per head (state S is (hd, hd))::
+
+    y_t = r_t @ (S + u*k_t (x) v_t) ;  S = w_t*S (col-scaled) + k_t (x) v_t
+
+Tiling: grid = (B*H,); each program holds its head's (S, hd) r/k/v/w slabs
+in VMEM and the (hd, hd) f32 state in scratch; time is the sequential loop.
+hd = 64 keeps the state at 16 KiB — the op is VMEM-resident and
+bandwidth-bound on the rkvw streams, matching the RWKV-6 paper's kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, s_out_ref,
+            s_scr, *, seq_len: int):
+    s_scr[...] = s0_ref[0]
+
+    u = u_ref[0]                      # (1, hd) broadcast row
+
+    def step(t, _):
+        r = r_ref[0, t, :]            # (hd,)
+        k = k_ref[0, t, :]
+        v = v_ref[0, t, :]
+        w = w_ref[0, t, :]
+        kv = k[:, None] * v[None, :]              # (hd, hd)
+        s_eff = s_scr[...] + u[0][:, None] * kv
+        y_ref[0, t, :] = r @ s_eff
+        s_scr[...] = w[:, None] * s_scr[...] + kv
+        return 0
+
+    jax.lax.fori_loop(0, seq_len, step, 0)
+    s_out_ref[0] = s_scr[...]
+
+
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, s0: jax.Array, *, interpret: bool = False):
+    """r/k/v/w (B, H, S, hd) f32; u (H, hd); s0 (B, H, hd, hd).
+
+    Returns (y (B, H, S, hd), s_final (B, H, hd, hd)).
+    """
+    b, h, s, hd = r.shape
+    rf = r.reshape(b * h, s, hd)
+    kf = k.reshape(b * h, s, hd)
+    vf = v.reshape(b * h, s, hd)
+    wf = w.reshape(b * h, s, hd)
+    uf = jnp.broadcast_to(u[None], (b, h, hd)).reshape(b * h, 1, hd)
+    sf = s0.reshape(b * h, hd, hd)
+
+    y, s_fin = pl.pallas_call(
+        functools.partial(_kernel, seq_len=s),
+        grid=(b * h,),
+        in_specs=[
+            pl.BlockSpec((1, s, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, hd, hd), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, s, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, hd, hd), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, s, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b * h, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(rf, kf, vf, wf, uf, sf)
+    return y.reshape(b, h, s, hd), s_fin.reshape(b, h, hd, hd)

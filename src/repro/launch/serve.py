@@ -1,0 +1,75 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Runs the SpecOffload serving engine end-to-end at a reduced scale on this
+host (CPU), or emits the production sharding plan for the selected arch on
+the v5e mesh (``--plan``).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import MISTRAL_7B
+from repro.serving.engine import ServeRequest, ServingEngine
+from repro.sim.hardware import ENVS
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--env", default="env1", choices=sorted(ENVS))
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="run the reduced config (CPU-feasible)")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--n-cand", type=int, default=3)
+    ap.add_argument("--plan", action="store_true",
+                    help="print the ParaSpec plan + placement and exit")
+    args = ap.parse_args()
+
+    tcfg = get_config(args.arch)
+    hw = ENVS[args.env]
+
+    if args.plan:
+        from repro.core.placement import plan_placement
+        from repro.core.planner import ParaSpecPlanner, Workload
+        dcfg = MISTRAL_7B
+        planner = ParaSpecPlanner(tcfg, dcfg, hw)
+        rep = planner.search(Workload(args.prompt_len, args.gen))
+        print(f"policy (bs_prefill, bs_decode, bs_draft, n_cand) = "
+              f"{rep.policy.astuple()}")
+        print(f"predicted throughput = {rep.throughput:.2f} tok/s on "
+              f"{hw.name}")
+        plan = plan_placement(tcfg, dcfg, hw)
+        print(f"placement: hbm={plan.hbm_used/2**30:.1f}G "
+              f"host={plan.host_used/2**30:.1f}G "
+              f"disk={plan.disk_used/2**30:.1f}G")
+        for n in plan.notes:
+            print(" note:", n)
+        return
+
+    tcfg = tcfg.reduced(d_model=128)
+    dcfg = MISTRAL_7B.reduced(d_model=64, vocab=tcfg.vocab_size)
+    eng = ServingEngine(tcfg, dcfg, hw, n_cand=args.n_cand, batch_size=2)
+    eng.init_from_seed(0)
+
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        eng.submit(ServeRequest(
+            i, rng.integers(0, tcfg.vocab_size,
+                            args.prompt_len).astype(np.int32),
+            max_new_tokens=args.gen))
+    t0 = time.time()
+    done = eng.run()
+    dt = time.time() - t0
+    toks = sum(len(r.result) for r in done)
+    print(f"served {len(done)} requests, {toks} tokens in {dt:.1f}s "
+          f"({toks/dt:.2f} tok/s on CPU, reduced config '{tcfg.name}')")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,242 @@
+"""ShapeDtypeStruct input specs + sharding assignments for every
+(architecture x input-shape x mesh) combination.
+
+This is the single source of truth the dry-run, the launchers, and the
+roofline benchmarks share.  No device allocation happens here — everything
+is abstract (the shannon/kernels pattern: weak-type-correct, shardable
+stand-ins).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ATTN, SWA, InputShape, ModelConfig
+from repro.models import model as M
+from repro.models.transformer import cache_specs, decoder_param_specs
+from repro.training.optimizer import make_optimizer, opt_state_specs
+
+
+def batch_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _bspec(mesh):
+    ax = batch_axes(mesh)
+    return ax if len(ax) > 1 else ax[0]
+
+
+def train_layout(cfg: ModelConfig, shape: InputShape, mesh):
+    """(tokens batch spec, tokens seq spec, sequence-parallel axis).
+
+    Preferred: fully shard the batch over ('data','model') — pure
+    FSDP/ZeRO-3, no activation conflicts, tiny per-chip attention.  On the
+    multi-pod mesh the global batch (256) doesn't cover 512 chips, so the
+    *sequence* shards over 'pod' (seq-on-pod never conflicts with the
+    'model'-axis weight sharding).  MoE archs keep the batch off the model
+    axis (experts shard there; tokens spread over it inside shard_map).
+    """
+    multi = "pod" in mesh.axis_names
+    if multi:
+        return ("pod", "data"), None, "model"
+    return "data", None, "model"
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=_ns(mesh, spec))
+
+
+def abstract_tree(tree_of_arrays_or_specs, mesh, spec_tree):
+    """ShapeDtypeStructs for a pytree given matching PartitionSpecs."""
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                          sharding=_ns(mesh, s)),
+        tree_of_arrays_or_specs, spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+# ---------------------------------------------------------------------------
+# abstract params / caches (no allocation: eval_shape)
+
+
+def podify_specs(spec_tree, mesh):
+    """On the multi-pod mesh, widen every 'data' weight-sharding entry to
+    ('pod','data') — the pod axis joins the FSDP product, halving per-chip
+    parameter/optimizer bytes (DESIGN.md §6)."""
+    if "pod" not in mesh.axis_names:
+        return spec_tree
+
+    def conv(p):
+        out = []
+        for s in p:
+            if s == "data":
+                out.append(("pod", "data"))
+            else:
+                out.append(s)
+        return P(*out)
+
+    return jax.tree.map(conv, spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def model_param_specs(cfg: ModelConfig, mesh):
+    return podify_specs(
+        M.param_specs(cfg, model_size=mesh.shape.get("model", 1)), mesh)
+
+
+def abstract_params(cfg: ModelConfig, mesh):
+    shapes = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    return abstract_tree(shapes, mesh, model_param_specs(cfg, mesh))
+
+
+def abstract_opt_state(cfg: ModelConfig, mesh):
+    opt_init, _ = make_optimizer(cfg.optimizer)
+    pshapes = jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    oshapes = jax.eval_shape(opt_init, pshapes)
+    ospecs = opt_state_specs(cfg.optimizer,
+                             M.param_specs(cfg,
+                                           mesh.shape.get("model", 1)))
+    return abstract_tree(oshapes, mesh, podify_specs(ospecs, mesh))
+
+
+def kv_seq_spec(shape: InputShape, mesh):
+    """How the KV-cache sequence axis shards for a decode shape."""
+    if shape.name == "long_500k":
+        # batch=1: spread the sequence over every mesh axis
+        return tuple(mesh.axis_names)
+    return "model"
+
+
+def cache_batch_spec(shape: InputShape, mesh):
+    bs = shape.global_batch
+    ax = batch_axes(mesh)
+    import math
+    nb = math.prod(mesh.shape[a] for a in ax)
+    if bs % nb == 0:
+        return _bspec(mesh)
+    if bs % mesh.shape[ax[-1]] == 0:   # data axis only
+        return ax[-1]
+    return None
+
+
+def abstract_cache(cfg: ModelConfig, shape: InputShape, mesh):
+    from repro.models.transformer import init_cache
+    shapes = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+    specs = cache_specs(cfg, cache_batch_spec(shape, mesh),
+                        kv_seq_spec(shape, mesh))
+    return abstract_tree(shapes, mesh, specs)
+
+
+# ---------------------------------------------------------------------------
+# model inputs
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh) -> dict:
+    """Abstract model inputs for one (arch, input-shape) pair.
+
+    train  -> {'batch': {tokens[, encoder_frames]}}
+    prefill-> {'tokens'[, 'encoder_frames'], 'cache'}
+    decode -> {'cache', 'tokens'} (one new token per sequence)
+    """
+    b, s = shape.global_batch, shape.seq_len
+    bspec = cache_batch_spec(shape, mesh)
+    out = {}
+    if shape.phase == "train":
+        tb, ts, _ = train_layout(cfg, shape, mesh)
+        batch = {"tokens": _sds((b, s), jnp.int32, mesh, P(tb, ts))}
+        if cfg.encoder_decoder:
+            batch["encoder_frames"] = _sds(
+                (b, cfg.encoder_len, cfg.d_model), jnp.float32, mesh,
+                P(tb, None, None))
+        out["batch"] = batch
+    elif shape.phase == "prefill":
+        out["tokens"] = _sds((b, s), jnp.int32, mesh, P(bspec, None))
+        if cfg.encoder_decoder:
+            out["encoder_frames"] = _sds(
+                (b, cfg.encoder_len, cfg.d_model), jnp.float32, mesh,
+                P(bspec, None, None))
+        out["cache"] = abstract_cache(cfg, shape, mesh)
+    else:  # decode
+        out["cache"] = abstract_cache(cfg, shape, mesh)
+        out["tokens"] = _sds((b, 1), jnp.int32, mesh, P(bspec, None))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step builders
+
+
+def build_step(cfg: ModelConfig, shape: InputShape, mesh, lr: float = 1e-4):
+    """Returns (fn, kwargs_specs, donate_argnames) for jit+lower."""
+    from repro.models.layers import sequence_sharding
+    from repro.training.train_loop import make_train_step
+    ins = input_specs(cfg, shape, mesh)
+
+    if shape.phase == "train":
+        accum = pick_accum(cfg, shape, mesh)
+        host_opt = cfg.param_count() > 1e11   # ZeRO-Offload for the giants
+        step = make_train_step(cfg, mesh, lr, accum_steps=accum,
+                               host_optimizer=host_opt)
+        _, _, seq_ax = train_layout(cfg, shape, mesh)
+
+        def train_fn(params, opt_state, batch):
+            with sequence_sharding(seq_ax):
+                return step(params, opt_state, batch)
+
+        args = (abstract_params(cfg, mesh), abstract_opt_state(cfg, mesh),
+                ins["batch"])
+        return train_fn, args, (0, 1)
+
+    if shape.phase == "prefill":
+        if cfg.encoder_decoder:
+            def prefill_fn(params, tokens, frames, cache):
+                with sequence_sharding("model"):
+                    return M.prefill(params, cfg, tokens, cache, mesh,
+                                     encoder_frames=frames)
+            args = (abstract_params(cfg, mesh), ins["tokens"],
+                    ins["encoder_frames"], ins["cache"])
+            return prefill_fn, args, (3,)
+
+        def prefill_fn(params, tokens, cache):
+            with sequence_sharding("model"):
+                return M.prefill(params, cfg, tokens, cache, mesh)
+        args = (abstract_params(cfg, mesh), ins["tokens"], ins["cache"])
+        return prefill_fn, args, (2,)
+
+    def serve_fn(params, cache, tokens):
+        with sequence_sharding(None):
+            return M.decode_step(params, cfg, cache, tokens, mesh)
+
+    args = (abstract_params(cfg, mesh), ins["cache"], ins["tokens"])
+    return serve_fn, args, (1,)
+
+
+def pick_accum(cfg: ModelConfig, shape: InputShape, mesh) -> int:
+    """Gradient-accumulation steps: keep per-chip microbatch activations
+    (B_loc_micro * d_model) within budget for the big dense configs."""
+    tb, _, _ = train_layout(cfg, shape, mesh)
+    import math
+    axes = tb if isinstance(tb, tuple) else (tb,)
+    nb = math.prod(mesh.shape[a] for a in axes)
+    b_loc = max(1, shape.global_batch // nb)
+    target = max(1, (b_loc * cfg.d_model) // 8192)
+    accum = 1
+    while accum < min(target, b_loc):
+        accum *= 2
+    return accum
+
+
+def applicable(cfg: ModelConfig, shape: InputShape) -> tuple:
+    """(runs?, reason) — the long_500k skip policy from DESIGN.md §5."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("SKIP(long-context): pure full-attention architecture "
+                       "— no sub-quadratic variant (DESIGN.md §5)")
+    return True, ""

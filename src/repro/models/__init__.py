@@ -1,0 +1,7 @@
+"""Pure-JAX model substrate: layers, attention, MoE, recurrent blocks.
+
+Parameters are plain pytrees (nested dicts of jnp arrays); every module
+exposes ``init_*`` (PRNG -> params), ``apply``-style pure functions, and a
+``*_specs`` twin returning a same-structure pytree of
+``jax.sharding.PartitionSpec`` for the production mesh.
+"""

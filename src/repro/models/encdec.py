@@ -1,0 +1,77 @@
+"""Whisper-style encoder stack (arXiv:2212.04356).
+
+Per the assignment brief, the modality frontend (mel-spectrogram + conv
+feature extractor) is a *stub*: ``input_specs`` provides precomputed frame
+embeddings of shape (B, encoder_len, d_model).  This module implements the
+transformer encoder that consumes them: sinusoidal positions, bidirectional
+attention, GELU MLPs, LayerNorm.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models.attention import attention_chunked, init_attention
+from repro.models.layers import (apply_mlp, apply_norm, init_mlp, init_norm,
+                                 mlp_specs, norm_specs, sinusoidal_positions)
+
+
+def init_encoder(key, cfg: ModelConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    n = cfg.n_encoder_layers
+
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "ln1": init_norm(cfg.d_model, cfg.norm, dt),
+            "attn": init_attention(k1, cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.head_dim, dt),
+            "ln2": init_norm(cfg.d_model, cfg.norm, dt),
+            "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.activation, dt),
+        }
+
+    keys = jax.random.split(key, n)
+    return {"layers": jax.vmap(one)(keys),
+            "final_norm": init_norm(cfg.d_model, cfg.norm, dt)}
+
+
+def encoder_specs(cfg: ModelConfig) -> dict:
+    lift = lambda s: P(None, *s)
+    one = {
+        "ln1": norm_specs(cfg.norm),
+        "attn": attn_lib.attention_specs(),
+        "ln2": norm_specs(cfg.norm),
+        "mlp": mlp_specs(cfg.activation),
+    }
+    return {"layers": jax.tree.map(lift, one,
+                                   is_leaf=lambda s: isinstance(s, P)),
+            "final_norm": norm_specs(cfg.norm)}
+
+
+def apply_encoder(params: dict, cfg: ModelConfig,
+                  frames: jax.Array) -> jax.Array:
+    """frames (B, T, D) stub embeddings -> encoder states (B, T, D)."""
+    b, t, d = frames.shape
+    x = frames + sinusoidal_positions(t, d).astype(frames.dtype)
+    scale = cfg.head_dim ** -0.5
+    positions = jnp.arange(t, dtype=jnp.int32)
+
+    def body(x, layer):
+        h = apply_norm(layer["ln1"], x, cfg.norm)
+        q = (h @ layer["attn"]["wq"]).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        k = (h @ layer["attn"]["wk"]).reshape(b, t, cfg.n_kv_heads,
+                                              cfg.head_dim)
+        v = (h @ layer["attn"]["wv"]).reshape(b, t, cfg.n_kv_heads,
+                                              cfg.head_dim)
+        out = attention_chunked(q, k, v, positions, positions, scale,
+                                causal=False)
+        x = x + out @ layer["attn"]["wo"]
+        x = x + apply_mlp(layer["mlp"], apply_norm(layer["ln2"], x, cfg.norm),
+                          cfg.activation)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return apply_norm(params["final_norm"], x, cfg.norm)

@@ -1,0 +1,160 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block structure::
+
+    x ──ln──┬── w_y ── gelu ─────────────────┐
+            └── w_x ── causal conv1d ── RG-LRU ──*──  w_out ── (+residual)
+
+RG-LRU recurrence (all element-wise over the ``width`` channels)::
+
+    r_t = sigmoid(x_t @ w_a + b_a)            # recurrence gate
+    i_t = sigmoid(x_t @ w_i + b_i)            # input gate
+    log a_t = -c * softplus(a_param) * r_t    # c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Speculative decoding needs to *roll back* rejected tokens, so the multi-token
+decode path returns the per-step state stack; ``commit`` selects the state at
+the accepted position (see ``repro.core.spec_decode``).
+
+State: ``{"h": (B, W) f32, "conv": (B, conv_width-1, W)}``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import dense_init, seq_axis, shard_hint
+
+_C = 8.0
+_EPS = 1e-6
+
+
+def init_rglru(key, d_model: int, width: int, conv_width: int, dtype) -> dict:
+    ks = jax.random.split(key, 7)
+    # a_param init so that a = exp(-c*softplus(a_param)) spans ~[0.9, 0.999]
+    u = jax.random.uniform(ks[0], (width,), minval=0.9, maxval=0.999)
+    a_param = jnp.log(jnp.expm1(-jnp.log(u) / _C)).astype(jnp.float32)
+    return {
+        "w_y": dense_init(ks[1], d_model, width, dtype),
+        "w_x": dense_init(ks[2], d_model, width, dtype),
+        "w_out": dense_init(ks[3], width, d_model, dtype),
+        "conv_w": (jax.random.normal(ks[4], (conv_width, width)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((width,), dtype),
+        "w_a": dense_init(ks[5], width, width, dtype),
+        "b_a": jnp.zeros((width,), jnp.float32),
+        "w_i": dense_init(ks[6], width, width, dtype),
+        "b_i": jnp.zeros((width,), jnp.float32),
+        "a_param": a_param,
+    }
+
+
+def rglru_specs() -> dict:
+    return {
+        "w_y": P("data", "model"), "w_x": P("data", "model"),
+        "w_out": P("model", "data"),
+        "conv_w": P(None, "model"), "conv_b": P("model"),
+        "w_a": P("data", "model"), "b_a": P("model"),
+        "w_i": P("data", "model"), "b_i": P("model"),
+        "a_param": P("model"),
+    }
+
+
+def init_rglru_state(batch: int, width: int, conv_width: int, dtype) -> dict:
+    return {"h": jnp.zeros((batch, width), jnp.float32),
+            "conv": jnp.zeros((batch, conv_width - 1, width), dtype)}
+
+
+def rglru_state_specs(batch_spec) -> dict:
+    return {"h": P(batch_spec, "model"), "conv": P(batch_spec, None, "model")}
+
+
+def _conv1d_causal(x: jax.Array, conv_state: jax.Array, w: jax.Array,
+                   b: jax.Array):
+    """Depthwise causal conv over time. x (B,S,W); state (B,cw-1,W).
+
+    Returns (y (B,S,W), new_state).
+    """
+    cw = w.shape[0]
+    full = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    y = jnp.zeros_like(x)
+    s = x.shape[1]
+    for i in range(cw):
+        y = y + full[:, i:i + s] * w[cw - 1 - i]
+    new_state = full[:, -(cw - 1):] if cw > 1 else conv_state
+    return y + b, new_state
+
+
+def _rglru_scan(params: dict, x: jax.Array, h0: jax.Array):
+    """Run the RG-LRU over x (B,S,W) from state h0 (B,W) f32.
+
+    Returns (y (B,S,W) f32, h_all (B,S,W) f32) — the full state stack (the
+    output *is* the state, which makes rollback free).
+    """
+    wshard = (lambda z: shard_hint(z, "data", None, "model")) \
+        if seq_axis() == "model" else (lambda z: z)
+    xf = x.astype(jnp.float32)
+    r = wshard(jax.nn.sigmoid(xf @ params["w_a"].astype(jnp.float32)
+                              + params["b_a"]))
+    i = wshard(jax.nn.sigmoid(xf @ params["w_i"].astype(jnp.float32)
+                              + params["b_i"]))
+    log_a = -_C * jax.nn.softplus(params["a_param"]) * r          # (B,S,W)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), _EPS, 1.0)) * (i * xf)
+
+    def step(h, inp):
+        a_t, g_t = inp
+        h = a_t * h + g_t
+        return h, h
+
+    if seq_axis() == "model":
+        h0 = shard_hint(h0, "data", "model")
+    aT = jnp.swapaxes(a, 0, 1)        # (S,B,W) scan over time
+    gT = jnp.swapaxes(gated, 0, 1)
+    _, h_allT = jax.lax.scan(step, h0, (aT, gT))
+    h_all = jnp.swapaxes(h_allT, 0, 1)
+    return h_all, h_all
+
+
+def apply_rglru_block(params: dict, x: jax.Array, state: dict):
+    """Full recurrent block over x (B,S,D).
+
+    Returns (out (B,S,D), new_state, state_stack) where ``state_stack`` holds
+    per-step recurrent+conv states for speculative rollback:
+    ``{"h": (B,S,W), "conv": (B,S,cw-1,W)}``.
+    """
+    # keep the width dim sharded on the model axis throughout the block so
+    # the (B, S, W) recurrence intermediates stay 1/model_size per chip
+    wshard = (lambda z: shard_hint(z, "data", None, "model")) \
+        if seq_axis() == "model" else (lambda z: z)
+    y_branch = wshard(jax.nn.gelu(x @ params["w_y"]))
+    xb = wshard(x @ params["w_x"])
+    cw = params["conv_w"].shape[0]
+    conv_out, conv_final = _conv1d_causal(xb, state["conv"], params["conv_w"],
+                                          params["conv_b"])
+    h_out, h_stack = _rglru_scan(params, conv_out, state["h"])
+    out = (h_out.astype(x.dtype) * y_branch) @ params["w_out"]
+    new_state = {"h": h_stack[:, -1], "conv": conv_final}
+
+    s = x.shape[1]
+    state_stack = None
+    if s <= 16:  # decode/verify path: keep per-step states for rollback
+        full = jnp.concatenate([state["conv"].astype(xb.dtype), xb], axis=1)
+        conv_stack = jnp.stack(
+            [full[:, i + 1:i + cw] for i in range(s)], axis=1)  # (B,S,cw-1,W)
+        # index 0 = the pre-step state, so commit(n=0) is expressible
+        state_stack = {
+            "h": jnp.concatenate([state["h"][:, None], h_stack], axis=1),
+            "conv": jnp.concatenate(
+                [state["conv"][:, None].astype(conv_stack.dtype), conv_stack],
+                axis=1),
+        }
+    return out, new_state, state_stack
+
+
+def select_rglru_state(state_stack: dict, index: jax.Array) -> dict:
+    """Pick per-sequence state at step ``index`` (B,) from the stack."""
+    b = index.shape[0]
+    bi = jnp.arange(b)
+    return {"h": state_stack["h"][bi, index],
+            "conv": state_stack["conv"][bi, index]}

@@ -1,0 +1,216 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): attention-free time mixing with
+data-dependent per-channel decay.
+
+Time-mix (per head of size ``hd``; r, k, w are (hd,), v is (hd,))::
+
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)        # u = per-channel bonus
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T              # w_t = data-dep. decay
+
+with ``w_t = exp(-exp(w0 + tanh(x_w @ A) @ B))`` (low-rank data dependence).
+Token-shift interpolation ``lerp(x_t, x_{t-1}, mu_*)`` feeds each projection.
+
+Channel-mix: ``out = sigmoid(r) * ( relu(k)^2 @ Wv )`` with token shift.
+
+State per layer: ``{"S": (B,H,hd,hd) f32, "ts_a": (B,D), "ts_c": (B,D)}``
+(the last input for the time-mix / channel-mix token shifts).  Multi-token
+decode returns per-step state stacks for speculative rollback.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import dense_init, seq_axis, shard_hint
+
+_LORA = 64
+
+
+def _pick_segment(s: int, target: int = 64) -> int:
+    """Largest divisor of s not exceeding target (remat segment length)."""
+    seg = min(target, s)
+    while s % seg:
+        seg -= 1
+    return seg
+
+
+def init_rwkv_tmix(key, d_model: int, head_size: int, dtype) -> dict:
+    ks = jax.random.split(key, 10)
+    d = d_model
+    decay = jnp.linspace(-6.0, -2.0, d).astype(jnp.float32)
+    return {
+        "mu_r": jnp.full((d,), 0.5, dtype), "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype), "mu_g": jnp.full((d,), 0.5, dtype),
+        "mu_w": jnp.full((d,), 0.5, dtype),
+        "w_r": dense_init(ks[0], d, d, dtype), "w_k": dense_init(ks[1], d, d, dtype),
+        "w_v": dense_init(ks[2], d, d, dtype), "w_g": dense_init(ks[3], d, d, dtype),
+        "w_o": dense_init(ks[4], d, d, dtype),
+        "w0": decay,                                   # base log-log decay
+        "w_lora_a": dense_init(ks[5], d, _LORA, jnp.float32),
+        "w_lora_b": (jax.random.normal(ks[6], (_LORA, d)) * 0.01).astype(jnp.float32),
+        "u": (jax.random.normal(ks[7], (d,)) * 0.1).astype(jnp.float32),
+        "ln_x": jnp.ones((d,), jnp.float32),           # per-head group norm
+    }
+
+
+def tmix_specs() -> dict:
+    return {
+        "mu_r": P(None), "mu_k": P(None), "mu_v": P(None), "mu_g": P(None),
+        "mu_w": P(None),
+        "w_r": P("data", "model"), "w_k": P("data", "model"),
+        "w_v": P("data", "model"), "w_g": P("data", "model"),
+        "w_o": P("model", "data"),
+        "w0": P("model"), "w_lora_a": P("data", None), "w_lora_b": P(None, "model"),
+        "u": P("model"), "ln_x": P("model"),
+    }
+
+
+def init_rwkv_cmix(key, d_model: int, d_ff: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d_model,), 0.5, dtype),
+        "mu_r": jnp.full((d_model,), 0.5, dtype),
+        "w_k": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_v": dense_init(ks[1], d_ff, d_model, dtype),
+        "w_r": dense_init(ks[2], d_model, d_model, dtype),
+    }
+
+
+def cmix_specs() -> dict:
+    return {"mu_k": P(None), "mu_r": P(None),
+            "w_k": P("data", "model"), "w_v": P("model", "data"),
+            "w_r": P("data", "model")}
+
+
+def init_rwkv_state(batch: int, d_model: int, head_size: int, dtype) -> dict:
+    h = d_model // head_size
+    return {"S": jnp.zeros((batch, h, head_size, head_size), jnp.float32),
+            "ts_a": jnp.zeros((batch, d_model), dtype),
+            "ts_c": jnp.zeros((batch, d_model), dtype)}
+
+
+def rwkv_state_specs(batch_spec) -> dict:
+    return {"S": P(batch_spec, "model", None, None),
+            "ts_a": P(batch_spec, None), "ts_c": P(batch_spec, None)}
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """x_{t-1} stream: prev for t=0, x shifted right otherwise."""
+    return jnp.concatenate([prev[:, None].astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def _lerp(x, x_prev, mu):
+    return x + (x_prev - x) * mu
+
+
+def apply_rwkv_tmix(params: dict, x: jax.Array, state_S: jax.Array,
+                    ts_prev: jax.Array, head_size: int):
+    """Time mix over x (B,S,D). Returns (out, S_stack (B,S,H,hd,hd),
+    new ts (B,D))."""
+    b, s, d = x.shape
+    h = d // head_size
+    xp = _token_shift(x, ts_prev)
+    # keep (B,S,D) projections sharded channel-on-model inside the block
+    dsh = (lambda z: shard_hint(z, "data", None, "model")) \
+        if seq_axis() == "model" else (lambda z: z)
+    r = dsh(_lerp(x, xp, params["mu_r"]) @ params["w_r"])
+    k = dsh(_lerp(x, xp, params["mu_k"]) @ params["w_k"])
+    v = dsh(_lerp(x, xp, params["mu_v"]) @ params["w_v"])
+    g = dsh(jax.nn.silu(_lerp(x, xp, params["mu_g"]) @ params["w_g"]))
+    xw = _lerp(x, xp, params["mu_w"]).astype(jnp.float32)
+    w_log = params["w0"] + jnp.tanh(xw @ params["w_lora_a"]) @ params["w_lora_b"]
+    w = dsh(jnp.exp(-jnp.exp(w_log)))                        # (B,S,D) in (0,1)
+
+    def heads(z):
+        return z.reshape(b, s, h, head_size).astype(jnp.float32)
+
+    r_, k_, v_, w_ = heads(r), heads(k), heads(v), heads(w)
+    u = params["u"].reshape(h, head_size)
+    if seq_axis() == "model":
+        state_S = shard_hint(state_S, "data", "model", None, None)
+    want_stack = s <= 16  # decode/verify path keeps per-step states
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                             # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]           # (B,H,hd,hd)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S + u[None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, ((y, S) if want_stack else y)
+
+    swap = lambda z: jnp.swapaxes(z, 0, 1)                   # time-major
+    xs = (swap(r_), swap(k_), swap(v_), swap(w_))
+    if want_stack:
+        S_last, (yT, ST) = jax.lax.scan(step, state_S, xs)
+        S_stack = jnp.swapaxes(ST, 0, 1)                     # (B,S,H,hd,hd)
+    else:
+        # Training/prefill: the (hd x hd) state stack would be O(S*D*hd)
+        # bytes; scan in remat segments so backward only stores the state
+        # at segment boundaries and recomputes inside (classic BPTT
+        # checkpointing).
+        seg = _pick_segment(s)
+        n_seg = s // seg
+
+        def seg_step(S, seg_xs):
+            return jax.lax.scan(step, S, seg_xs)
+
+        seg_step = jax.checkpoint(seg_step)
+        xs_seg = jax.tree.map(
+            lambda z: z.reshape(n_seg, seg, *z.shape[1:]), xs)
+        S_last, yT = jax.lax.scan(
+            lambda S, sx: seg_step(S, sx), state_S, xs_seg)
+        yT = yT.reshape(s, b, h, head_size)
+        S_stack = S_last[:, None]                            # (B,1,H,hd,hd)
+    y = jnp.swapaxes(yT, 0, 1)                               # (B,S,H,hd)
+
+    # per-head RMS "group norm"
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6)
+    y = (y.reshape(b, s, d) * params["ln_x"]).astype(x.dtype)
+    out = (y * g) @ params["w_o"]
+    return out, S_stack, x[:, -1]
+
+
+def apply_rwkv_cmix(params: dict, x: jax.Array, ts_prev: jax.Array):
+    xp = _token_shift(x, ts_prev)
+    k = _lerp(x, xp, params["mu_k"]) @ params["w_k"]
+    kv = jnp.square(jax.nn.relu(k)) @ params["w_v"]
+    r = jax.nn.sigmoid(_lerp(x, xp, params["mu_r"]) @ params["w_r"])
+    return r * kv, x[:, -1]
+
+
+def apply_rwkv_block(tmix: dict, cmix: dict, ln1, ln2, x: jax.Array,
+                     state: dict, head_size: int, norm_fn):
+    """Full RWKV layer (pre-norm residual twice).
+
+    Returns (out, new_state, state_stack|None).  ``state_stack`` (decode
+    only, S<=16) holds per-step S / token-shift values for rollback.
+    """
+    b, s, _ = x.shape
+    a_in = norm_fn(ln1, x)
+    a_out, S_stack, ts_a = apply_rwkv_tmix(tmix, a_in, state["S"],
+                                           state["ts_a"], head_size)
+    x = x + a_out
+    c_in = norm_fn(ln2, x)
+    c_out, ts_c = apply_rwkv_cmix(cmix, c_in, state["ts_c"])
+    x = x + c_out
+    new_state = {"S": S_stack[:, -1], "ts_a": ts_a, "ts_c": ts_c}
+    stack = None
+    if s <= 16:
+        # token-shift stacks are the (normed) inputs at each step; index 0
+        # holds the pre-step state so commit(n=0) is expressible
+        stack = {
+            "S": jnp.concatenate([state["S"][:, None], S_stack], axis=1),
+            "ts_a": jnp.concatenate(
+                [state["ts_a"][:, None].astype(a_in.dtype), a_in], axis=1),
+            "ts_c": jnp.concatenate(
+                [state["ts_c"][:, None].astype(c_in.dtype), c_in], axis=1),
+        }
+    return x, new_state, stack
+
+
+def select_rwkv_state(stack: dict, index: jax.Array) -> dict:
+    b = index.shape[0]
+    bi = jnp.arange(b)
+    return {"S": stack["S"][bi, index],
+            "ts_a": stack["ts_a"][bi, index],
+            "ts_c": stack["ts_c"][bi, index]}

@@ -1,0 +1,457 @@
+"""Decoder stack assembly: layer-group scan, cache plumbing, phase dispatch.
+
+The model is organized as ``n_groups`` repetitions of the config's
+``layer_pattern`` (e.g. ``('rglru','rglru','swa')`` for RecurrentGemma,
+``('swa',)*5 + ('attn',)`` for Gemma-3).  Parameters and caches are *stacked*
+over the group axis and the forward pass is a single ``lax.scan`` over
+groups, which keeps HLO size flat for 126-layer models and lets remat wrap
+one group at a time.
+
+Phases
+------
+* ``train`` / ``prefill`` — full-sequence; prefill additionally (re)fills the
+  cache.  Positions are uniform (scalar offset 0).
+* ``decode`` — Sq in [1, 16] new tokens per sequence at per-sequence
+  positions ``cache['pos']`` (B,).  Writes are performed eagerly; the
+  returned ``pending`` pytree carries what `commit` needs to *undo* writes
+  for rejected speculative tokens (ring-buffer rows, recurrent state stacks).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ATTN, RGLRU, RWKV, SWA, ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import rwkv as rwkv_lib
+from repro.models.attention import (apply_attention, init_attention,
+                                    init_kv_cache, restore_rejected_rows)
+from repro.models.layers import (apply_mlp, apply_norm, embed_tokens,
+                                 embedding_specs, init_embedding, init_mlp,
+                                 init_norm, mlp_specs, norm_specs, unembed)
+
+MAX_DECODE_TOKENS = 16
+
+
+def _sqrt_factor(n: int, threshold: int = 8) -> int:
+    """Outer superblock count for sqrt-remat (1 = disabled)."""
+    if n < threshold:
+        return 1
+    best = 1
+    import math
+    root = math.isqrt(n)
+    for k in range(root, 0, -1):
+        if n % k == 0:
+            best = k
+            break
+    return best if best > 1 else 1
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _norm_fn(cfg: ModelConfig):
+    return lambda p, x: apply_norm(p, x, cfg.norm)
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / specs / apply
+
+
+def init_layer(key, cfg: ModelConfig, kind: str,
+               use_moe: bool = False) -> dict:
+    ks = jax.random.split(key, 3)
+    dt = _dtype(cfg)
+    p = {"ln1": init_norm(cfg.d_model, cfg.norm, dt),
+         "ln2": init_norm(cfg.d_model, cfg.norm, dt)}
+    if kind in (ATTN, SWA):
+        p["attn"] = init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.head_dim, dt)
+        if cfg.encoder_decoder:
+            kx = jax.random.split(ks[2], 2)
+            p["xattn"] = init_attention(kx[0], cfg.d_model, cfg.n_heads,
+                                        cfg.n_kv_heads, cfg.head_dim, dt)
+            p["ln_x"] = init_norm(cfg.d_model, cfg.norm, dt)
+        if use_moe:
+            p["ffn"] = moe_lib.init_moe(ks[1], cfg.d_model, cfg.d_ff,
+                                        cfg.n_experts, cfg.activation, dt)
+        else:
+            p["ffn"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff,
+                                cfg.activation, dt)
+    elif kind == RGLRU:
+        p["rec"] = rglru_lib.init_rglru(ks[0], cfg.d_model, cfg.rnn_width,
+                                        cfg.conv_width, dt)
+        p["ffn"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.activation, dt)
+    elif kind == RWKV:
+        p["tmix"] = rwkv_lib.init_rwkv_tmix(ks[0], cfg.d_model,
+                                            cfg.rwkv_head_size, dt)
+        p["cmix"] = rwkv_lib.init_rwkv_cmix(ks[1], cfg.d_model, cfg.d_ff, dt)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def layer_specs(cfg: ModelConfig, kind: str, model_size: int,
+                use_moe: bool = False) -> dict:
+    p = {"ln1": norm_specs(cfg.norm), "ln2": norm_specs(cfg.norm)}
+    if kind in (ATTN, SWA):
+        p["attn"] = attn_lib.attention_specs()
+        if cfg.encoder_decoder:
+            p["xattn"] = attn_lib.attention_specs()
+            p["ln_x"] = norm_specs(cfg.norm)
+        if use_moe:
+            p["ffn"] = moe_lib.moe_storage_specs(cfg.activation,
+                                                 cfg.n_experts, model_size)
+        else:
+            p["ffn"] = mlp_specs(cfg.activation)
+    elif kind == RGLRU:
+        p["rec"] = rglru_lib.rglru_specs()
+        p["ffn"] = mlp_specs(cfg.activation)
+    elif kind == RWKV:
+        p["tmix"] = rwkv_lib.tmix_specs()
+        p["cmix"] = rwkv_lib.cmix_specs()
+    return p
+
+
+def apply_layer(params: dict, cfg: ModelConfig, kind: str, x: jax.Array,
+                cache: dict | None, pos, phase: str, mesh=None,
+                enc_out: jax.Array | None = None, use_moe: bool = False):
+    """Returns (x, new_cache, pending)."""
+    nf = _norm_fn(cfg)
+    pending = {}
+    # Megatron-style sequence parallelism: the residual stream between
+    # layers is sequence-sharded on 'model' (cheap to store); gather it here
+    # so weight matmuls see replicated-S activations and SPMD gathers only
+    # the small FSDP weight shards — NOT the full (D, F) matrix (which it
+    # would do, in f32, if S stayed 'model'-sharded through the matmul).
+    from repro.models.layers import fsdp_axes, gather_seq, shard_hint
+    x = gather_seq(x)
+    if phase == "decode":
+        # weight-stationary decode (§Perf hillclimb #2): contraction-shard
+        # the tiny token block to match the weights' at-rest FSDP sharding
+        # (('pod','data') on the multi-pod mesh) so the qkv projections
+        # psum instead of all-gathering their weights
+        ax = fsdp_axes()
+        if ax is not None:
+            x = shard_hint(x, None, None, ax)
+    if kind in (ATTN, SWA):
+        window = cfg.sliding_window if kind == SWA else None
+        self_cache = None
+        if cache is not None:
+            self_cache = {kk: vv for kk, vv in cache.items()
+                          if kk in ("k", "v", "k_scale", "v_scale")}
+        out, new_kv, saved = apply_attention(
+            params["attn"], nf(params["ln1"], x),
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+            use_rope=cfg.use_rope, window=window,
+            cache=self_cache, pos=pos, phase=phase)
+        x = x + out
+        if phase == "decode":
+            # Weight-stationary decode (§Perf hillclimb #2): the token
+            # block is tiny (B x m x D), so shard its *feature* dim to
+            # match the weights' contraction sharding — the FFN matmuls
+            # become local-partial + psum, moving ~MBs of activations per
+            # layer instead of all-gathering the 2D-sharded weights (GBs
+            # per step on a 405B model).
+            from repro.models.layers import fsdp_axes, shard_hint
+            ax = fsdp_axes()
+            if ax is not None:
+                x = shard_hint(x, None, None, ax)
+        if "xattn" in params:  # encoder-decoder cross attention
+            if phase in ("prefill", "train") or cache is None or \
+                    "ck" not in cache:
+                cross_kv = attn_lib.precompute_cross_kv(
+                    params["xattn"], enc_out, n_kv_heads=cfg.n_kv_heads,
+                    head_dim=cfg.head_dim)
+            else:
+                cross_kv = {"ck": cache["ck"], "cv": cache["cv"]}
+            x = x + attn_lib.apply_cross_attention(
+                params["xattn"], nf(params["ln_x"], x), cross_kv,
+                n_heads=cfg.n_heads, head_dim=cfg.head_dim)
+            if new_kv is not None:
+                new_kv = dict(new_kv, **cross_kv)
+        h = nf(params["ln2"], x)
+        if use_moe:
+            # decode steps are few-token: dropless dispatch is free there and
+            # keeps speculative verification exact (no batch-dependent drops)
+            cf = (float("inf") if (cfg.moe_dropless or phase == "decode")
+                  else cfg.capacity_factor)
+            f = moe_lib.apply_moe(params["ffn"], h, n_experts=cfg.n_experts,
+                                  top_k=cfg.top_k, activation=cfg.activation,
+                                  mesh=mesh, capacity_factor=cf)
+        else:
+            f = apply_mlp(params["ffn"], h, cfg.activation)
+        x = x + f
+        if phase == "decode":
+            pending = {"saved": saved}
+        return x, new_kv, pending
+
+    if kind == RGLRU:
+        out, new_state, stack = rglru_lib.apply_rglru_block(
+            params["rec"], nf(params["ln1"], x),
+            cache if cache is not None
+            else rglru_lib.init_rglru_state(x.shape[0], cfg.rnn_width,
+                                            cfg.conv_width, x.dtype))
+        x = x + out
+        x = x + apply_mlp(params["ffn"], nf(params["ln2"], x), cfg.activation)
+        if phase == "decode":
+            pending = {"stack": stack}
+        return x, new_state, pending
+
+    if kind == RWKV:
+        state = (cache if cache is not None else
+                 rwkv_lib.init_rwkv_state(x.shape[0], cfg.d_model,
+                                          cfg.rwkv_head_size, x.dtype))
+        x, new_state, stack = rwkv_lib.apply_rwkv_block(
+            params["tmix"], params["cmix"], params["ln1"], params["ln2"],
+            x, state, cfg.rwkv_head_size, nf)
+        if phase == "decode":
+            pending = {"stack": stack}
+        return x, new_state, pending
+
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# cache
+
+
+def init_layer_cache(cfg: ModelConfig, kind: str, batch: int,
+                     max_len: int) -> dict | None:
+    dt = _dtype(cfg)
+    if kind == ATTN:
+        c = init_kv_cache(batch, max_len, cfg.n_kv_heads, cfg.head_dim, dt,
+                          quant=cfg.kv_cache_dtype == "int8")
+        if cfg.encoder_decoder:
+            c["ck"] = jnp.zeros((batch, cfg.encoder_len, cfg.n_kv_heads,
+                                 cfg.head_dim), dt)
+            c["cv"] = jnp.zeros_like(c["ck"])
+        return c
+    if kind == SWA:
+        return init_kv_cache(batch, min(cfg.sliding_window, max_len),
+                             cfg.n_kv_heads, cfg.head_dim, dt)
+    if kind == RGLRU:
+        return rglru_lib.init_rglru_state(batch, cfg.rnn_width,
+                                          cfg.conv_width, dt)
+    if kind == RWKV:
+        return rwkv_lib.init_rwkv_state(batch, cfg.d_model,
+                                        cfg.rwkv_head_size, dt)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Stacked-over-groups cache: leaves get a leading (n_groups,) axis."""
+    layers = []
+    for kind in cfg.layer_pattern:
+        one = init_layer_cache(cfg, kind, batch, max_len)
+        layers.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_groups,) + a.shape), one))
+    return {"layers": tuple(layers),
+            "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def cache_specs(cfg: ModelConfig, batch_spec, seq_spec) -> dict:
+    """PartitionSpecs matching :func:`init_cache` (leading group axis)."""
+    layers = []
+    for kind in cfg.layer_pattern:
+        if kind in (ATTN, SWA):
+            one = attn_lib.kv_cache_specs(
+                batch_spec, seq_spec,
+                quant=(kind == ATTN and cfg.kv_cache_dtype == "int8"))
+            if cfg.encoder_decoder and kind == ATTN:
+                one["ck"] = P(batch_spec, None, None, None)
+                one["cv"] = P(batch_spec, None, None, None)
+        elif kind == RGLRU:
+            one = rglru_lib.rglru_state_specs(batch_spec)
+        else:
+            one = rwkv_lib.rwkv_state_specs(batch_spec)
+        layers.append(jax.tree.map(
+            lambda s: P(None, *s), one,
+            is_leaf=lambda s: isinstance(s, P)))
+    return {"layers": tuple(layers), "pos": P(None)}
+
+
+# ---------------------------------------------------------------------------
+# stacked init / specs for the whole decoder
+
+
+def init_decoder_params(key, cfg: ModelConfig) -> dict:
+    keys = jax.random.split(key, len(cfg.layer_pattern) + 2)
+    layers = []
+    for i, kind in enumerate(cfg.layer_pattern):
+        gkeys = jax.random.split(keys[i], cfg.n_groups)
+        moe_i = bool(cfg.is_moe and cfg.moe_pattern[i])
+        layers.append(jax.vmap(
+            lambda k, m=moe_i: init_layer(k, cfg, kind, m))(gkeys))
+    dt = _dtype(cfg)
+    return {
+        "embed": init_embedding(keys[-2], cfg.vocab_size, cfg.d_model, dt,
+                                cfg.tie_embeddings),
+        "layers": tuple(layers),
+        "final_norm": init_norm(cfg.d_model, cfg.norm, dt),
+    }
+
+
+def decoder_param_specs(cfg: ModelConfig, model_size: int = 16) -> dict:
+    layers = []
+    for i, kind in enumerate(cfg.layer_pattern):
+        moe_i = bool(cfg.is_moe and cfg.moe_pattern[i])
+        one = layer_specs(cfg, kind, model_size, moe_i)
+        layers.append(jax.tree.map(
+            lambda s: P(None, *s), one,
+            is_leaf=lambda s: isinstance(s, P)))
+    return {
+        "embed": embedding_specs(cfg.tie_embeddings, cfg.vocab_size,
+                                 cfg.d_model, model_size),
+        "layers": tuple(layers),
+        "final_norm": norm_specs(cfg.norm),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward
+
+
+def forward_decoder(params: dict, cfg: ModelConfig, x: jax.Array, *,
+                    phase: str, cache: dict | None = None, mesh=None,
+                    enc_out: jax.Array | None = None):
+    """Run the stacked decoder over embedded inputs x (B, S, D).
+
+    Returns (hidden, new_cache, pendings).  ``enc_out`` is the encoder
+    output for encoder-decoder configs (closed over by every layer).
+    """
+    pos = cache["pos"] if (cache is not None and phase == "decode") else 0
+    layer_caches = cache["layers"] if cache is not None else None
+
+    train = phase == "train"
+
+    def apply_group(x, gparams, gcache):
+        new_caches, pendings = [], []
+        for i, kind in enumerate(cfg.layer_pattern):
+            moe_i = bool(cfg.is_moe and cfg.moe_pattern[i])
+            x, nc, pend = apply_layer(gparams[i], cfg, kind, x, gcache[i],
+                                      pos, phase, mesh, enc_out=enc_out,
+                                      use_moe=moe_i)
+            new_caches.append(nc)
+            pendings.append(pend)
+        return x, tuple(new_caches), tuple(pendings)
+
+    if layer_caches is not None:
+        # Serving: thread the (stacked) cache through the scan *carry* and
+        # update it in place per group.  Passing it as scan xs/ys instead
+        # would materialize two extra full-cache copies (the sliced inputs
+        # and the re-stacked outputs) — tens of GiB for 32k-context caches.
+        def body(carry, group_in):
+            x, cache_layers = carry
+            j, gparams = group_in
+            gcache = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, j, 0,
+                                                       keepdims=False),
+                cache_layers)
+            x, new_caches, pendings = apply_group(x, gparams, gcache)
+            cache_layers = jax.tree.map(
+                lambda a, n: jax.lax.dynamic_update_index_in_dim(
+                    a, n.astype(a.dtype), j, 0),
+                cache_layers, new_caches)
+            return (x, cache_layers), tuple(pendings)
+
+        idx = jnp.arange(cfg.n_groups, dtype=jnp.int32)
+        (x, new_layer_caches), pendings = jax.lax.scan(
+            body, (x, layer_caches), (idx, params["layers"]))
+        return x, {"layers": new_layer_caches, "pos": cache["pos"]}, pendings
+
+    # Training / cache-less forward: plain scan over stacked params with
+    # (sqrt-)remat; for large models the per-group residual carry is
+    # offloaded to host memory (the paper's offload tier applied to
+    # training — ZeRO-R-style activation offload).
+    def body(x, gparams):
+        if train and cfg.offload_carries:
+            from jax.ad_checkpoint import checkpoint_name
+            x = checkpoint_name(x, "group_carry")
+        x, _, _ = apply_group(x, gparams, (None,) * len(cfg.layer_pattern))
+        if train:
+            # keep the inter-group carry sequence-sharded so the residuals
+            # reverse-mode AD stores per group are 1/seq_axis per chip
+            from repro.models.layers import seq_hint
+            x = seq_hint(x, 1, 1)
+        return x, None
+
+    if cfg.remat and train:
+        if cfg.offload_carries:
+            policy = jax.checkpoint_policies.save_and_offload_only_these_names(
+                names_which_can_be_saved=[],
+                names_which_can_be_offloaded=["group_carry"],
+                offload_src="device", offload_dst="pinned_host")
+            body = jax.checkpoint(body, policy=policy)
+        else:
+            body = jax.checkpoint(body)
+
+    n_outer = 1 if (cfg.offload_carries and cfg.remat and train) else (
+        _sqrt_factor(cfg.n_groups) if (cfg.remat and train) else 1)
+    if n_outer > 1:
+        # sqrt-remat: scan superblocks of groups with an outer checkpoint,
+        # so only n_outer + n_inner carries are live instead of n_groups
+        # (126-layer models would otherwise store one (B,S,D) residual per
+        # layer group).
+        n_inner = cfg.n_groups // n_outer
+        xs2 = jax.tree.map(
+            lambda a: a.reshape(n_outer, n_inner, *a.shape[1:]),
+            params["layers"])
+
+        @jax.checkpoint
+        def outer_body(x, sxs):
+            return jax.lax.scan(body, x, sxs)
+
+        x, _ = jax.lax.scan(outer_body, x, xs2)
+    else:
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    return x, None, ()
+
+
+def logits_from_hidden(params: dict, cfg: ModelConfig,
+                       x: jax.Array) -> jax.Array:
+    h = apply_norm(params["final_norm"], x, cfg.norm)
+    return unembed(params["embed"], h)
+
+
+# ---------------------------------------------------------------------------
+# commit for speculative decoding
+
+
+def commit_cache(cfg: ModelConfig, cache: dict, pendings, n_commit,
+                 sq: int) -> dict:
+    """Finalize a verify step: keep ``n_commit`` (B,) of the ``sq`` written
+    tokens, undo the rest, and advance ``pos``.
+
+    ``pendings`` is the scan-stacked pending pytree from
+    :func:`forward_decoder` (leaves have a leading (n_groups,) axis).
+    """
+    nc = jnp.asarray(n_commit, jnp.int32)
+    pos = cache["pos"]
+    new_layers = []
+    for i, kind in enumerate(cfg.layer_pattern):
+        c = cache["layers"][i]
+        pend = pendings[i]
+        if kind == ATTN:
+            new_layers.append(c)  # over-written rows are invisible
+        elif kind == SWA:
+            saved = pend["saved"]
+            if not saved:   # cache larger than window -> behaves like full
+                new_layers.append(c)
+            else:
+                fix = jax.vmap(
+                    lambda cc, sv: restore_rejected_rows(
+                        cc, sv, pos, nc, cfg.sliding_window))
+                new_layers.append(fix(c, saved))
+        else:  # recurrent: stack index n = state after n committed tokens
+            stack = pend["stack"]
+            sel = rglru_lib.select_rglru_state if kind == RGLRU \
+                else rwkv_lib.select_rwkv_state
+            idx = jnp.clip(nc, 0, sq)
+            new_layers.append(jax.vmap(lambda st: sel(st, idx))(stack))
+    return {"layers": tuple(new_layers), "pos": pos + nc}

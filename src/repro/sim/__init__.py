@@ -1,0 +1,3 @@
+"""Hardware models and the discrete-event pipeline simulator used to
+reproduce the paper's measured results (Figs 1/2/5/8, Tables 3/4) on
+hardware we do not have."""

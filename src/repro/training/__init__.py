@@ -1,0 +1,7 @@
+"""Training substrate: pure-JAX optimizers, the train step, checkpointing,
+and the training loop (no optax/flax dependency)."""
+from repro.training.checkpoint import restore_checkpoint, save_checkpoint
+from repro.training.optimizer import (adafactor_init, adafactor_update,
+                                      adamw_init, adamw_update,
+                                      make_optimizer)
+from repro.training.train_loop import make_train_step, train_loop

@@ -1,0 +1,69 @@
+"""Checkpointing: msgpack-serialized param/optimizer pytrees.
+
+No orbax/flax dependency — leaves are stored as (dtype, shape, raw bytes)
+with the treedef reconstructed from a path->leaf mapping, so any of the
+framework's nested-dict/tuple pytrees round-trips exactly.
+"""
+from __future__ import annotations
+
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out[key] = leaf
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    return str(p)
+
+
+def save_checkpoint(path, tree, step: int = 0):
+    """Write the pytree to ``path`` (msgpack)."""
+    leaves = _flatten_with_paths(tree)
+    payload = {
+        "step": step,
+        "leaves": {
+            k: {"dtype": str(v.dtype), "shape": list(v.shape),
+                "data": np.asarray(v).tobytes()}
+            for k, v in leaves.items()
+        },
+    }
+    p = pathlib.Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    tmp = p.with_suffix(".tmp")
+    tmp.write_bytes(msgpack.packb(payload))
+    tmp.replace(p)
+
+
+def restore_checkpoint(path, like_tree):
+    """Restore into the structure of ``like_tree``; returns (tree, step)."""
+    payload = msgpack.unpackb(pathlib.Path(path).read_bytes())
+    stored = payload["leaves"]
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
+    leaves = []
+    for pth, like in flat:
+        key = "/".join(_path_str(p) for p in pth)
+        rec = stored[key]
+        arr = np.frombuffer(rec["data"],
+                            dtype=np.dtype(rec["dtype"])).reshape(
+                                rec["shape"])
+        assert tuple(arr.shape) == tuple(like.shape), (key, arr.shape,
+                                                       like.shape)
+        leaves.append(jnp.asarray(arr))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like_tree), leaves)
+    return tree, payload["step"]

@@ -1,0 +1,157 @@
+"""Pure-JAX optimizers.
+
+* ``adamw`` — standard AdamW with f32 moments (default).
+* ``adafactor`` — factored second moment (Shazeer & Stern 2018), no first
+  moment.  Used for the >=400B assigned configs: AdamW's 12 bytes/param of
+  state does not fit the 16 GB/chip HBM budget at single-pod sharding
+  (DESIGN.md §6), Adafactor's row/col factors are ~0 bytes/param.
+
+State pytrees mirror the param tree so the launcher can shard them with
+the same PartitionSpecs.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.01):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+
+    def upd(g, mu, nu, p):
+        g = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        mu_hat = mu / (1 - b1 ** t)
+        nu_hat = nu / (1 - b2 ** t)
+        delta = mu_hat / (jnp.sqrt(nu_hat) + eps) + weight_decay * \
+            p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    flat_p = treedef.flatten_up_to(params)
+    outs = [upd(g, m, n, p)
+            for g, m, n, p in zip(flat_g, flat_mu, flat_nu, flat_p)]
+    new_params = treedef.unflatten([o[0] for o in outs])
+    mu = treedef.unflatten([o[1] for o in outs])
+    nu = treedef.unflatten([o[2] for o in outs])
+    return new_params, {"mu": mu, "nu": nu, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; no momentum)
+
+
+def adafactor_init(params):
+    def factors(p):
+        if p.ndim >= 2:
+            row = jnp.zeros(p.shape[:-1], jnp.float32)
+            col = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return {"row": row, "col": col}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"v": jax.tree.map(factors, params,
+                              is_leaf=lambda x: isinstance(x, jax.Array)),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads, state, params, lr, *, decay=0.8, eps=1e-30,
+                     clip=1.0):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta = 1.0 - t ** (-decay)
+
+    def upd(g, v, p):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + eps
+        if p.ndim >= 2:
+            row = beta * v["row"] + (1 - beta) * g2.mean(axis=-1)
+            col = beta * v["col"] + (1 - beta) * g2.mean(axis=-2)
+            denom = row.mean(axis=-1, keepdims=True)
+            rfac = (row / jnp.maximum(denom, eps))[..., None]
+            update = g * jax.lax.rsqrt(jnp.maximum(rfac * col[..., None, :],
+                                                   eps))
+            newv = {"row": row, "col": col}
+        else:
+            nu = beta * v["v"] + (1 - beta) * g2
+            update = g * jax.lax.rsqrt(jnp.maximum(nu, eps))
+            newv = {"v": nu}
+        norm = jnp.sqrt(jnp.mean(jnp.square(update)))
+        update = update / jnp.maximum(1.0, norm / clip)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype), newv
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_p = treedef.flatten_up_to(params)
+    flat_v = _flatten_states(state["v"], treedef)
+    outs = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+    new_params = treedef.unflatten([o[0] for o in outs])
+    newv = treedef.unflatten([o[1] for o in outs])
+    return new_params, {"v": newv, "step": step}
+
+
+def _flatten_states(vs, treedef):
+    """Flatten the v-state tree, where each leaf is a {row,col}|{v} dict."""
+    leaves = []
+
+    def rec(node):
+        if isinstance(node, dict) and ("row" in node or "v" in node):
+            leaves.append(node)
+            return
+        if isinstance(node, dict):
+            for k in sorted(node):
+                rec(node[k])
+        elif isinstance(node, (list, tuple)):
+            for x in node:
+                rec(x)
+        else:
+            leaves.append(node)
+
+    rec(vs)
+    assert len(leaves) == treedef.num_leaves, (len(leaves), treedef.num_leaves)
+    return leaves
+
+
+# ---------------------------------------------------------------------------
+
+
+def make_optimizer(kind: str):
+    if kind == "adamw":
+        return adamw_init, adamw_update
+    if kind == "adafactor":
+        return adafactor_init, adafactor_update
+    raise ValueError(kind)
+
+
+def opt_state_specs(kind: str, param_specs):
+    """PartitionSpecs for the optimizer state, mirroring param specs."""
+    from jax.sharding import PartitionSpec as P
+    if kind == "adamw":
+        return {"mu": param_specs, "nu": param_specs, "step": P()}
+
+    def factors(spec):
+        names = tuple(spec) if spec else ()
+        # row drops the last dim's axis, col drops the second-to-last
+        if len(names) >= 2:
+            return {"row": P(*names[:-1]), "col": P(*names[:-2], names[-1])}
+        return {"v": P(*names)}
+
+    is_spec = lambda s: isinstance(s, __import__("jax").sharding.PartitionSpec)
+    v = jax.tree.map(factors, param_specs, is_leaf=is_spec)
+    return {"v": v, "step": P()}

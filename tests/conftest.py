@@ -1,0 +1,62 @@
+"""Shared fixtures/utilities for the test suite.
+
+NOTE: no XLA_FLAGS device-count override here — smoke tests and benches see
+the single real CPU device.  The multi-pod dry-run sets its own flags (and
+runs as a subprocess in tests that need many devices).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+
+def tiny_config(pattern=("attn",), arch="dense", n_layers=None, **kw):
+    return ModelConfig(
+        name="tiny", arch_type=arch,
+        n_layers=n_layers or (len(pattern) * 2),
+        d_model=kw.pop("d_model", 64), n_heads=kw.pop("n_heads", 4),
+        n_kv_heads=kw.pop("n_kv_heads", 2), d_ff=kw.pop("d_ff", 128),
+        vocab_size=kw.pop("vocab_size", 61), layer_pattern=pattern,
+        sliding_window=kw.pop("sliding_window", 8),
+        dtype="float32", remat=False, **kw)
+
+
+def tiny_draft_config(vocab_size=61):
+    return ModelConfig(
+        name="tiny-draft", arch_type="dense", n_layers=2, d_model=32,
+        n_heads=2, n_kv_heads=1, d_ff=64, vocab_size=vocab_size,
+        layer_pattern=("swa",), sliding_window=8, dtype="float32",
+        remat=False)
+
+
+@pytest.fixture(scope="session")
+def jitted():
+    """Jitted model entry points (cfg/mesh static)."""
+    return {
+        "forward_train": jax.jit(M.forward_train, static_argnums=(1,),
+                                 static_argnames=("mesh",)),
+        "prefill": jax.jit(M.prefill, static_argnums=(1,),
+                           static_argnames=("mesh",)),
+        "decode_step": jax.jit(M.decode_step, static_argnums=(1,),
+                               static_argnames=("mesh",)),
+        "decode": jax.jit(M.decode, static_argnums=(1,),
+                          static_argnames=("mesh",)),
+        "commit": jax.jit(M.commit, static_argnums=(0, 4)),
+    }
+
+
+def greedy_reference(params, cfg, toks, steps, maxlen, jitted):
+    """Pure greedy decoding reference: returns (steps,) tokens per seq."""
+    from repro.models.transformer import init_cache
+    b = toks.shape[0]
+    cache = init_cache(cfg, b, maxlen)
+    lg, cache = jitted["prefill"](params, cfg, toks, cache)
+    out = []
+    tok = jnp.argmax(lg, -1)
+    for _ in range(steps):
+        out.append(tok)
+        lg, cache = jitted["decode_step"](params, cfg, cache, tok[:, None])
+        tok = jnp.argmax(lg, -1)
+    return jnp.stack(out, axis=1)

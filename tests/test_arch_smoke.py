@@ -1,0 +1,95 @@
+"""Per-architecture smoke tests: a REDUCED variant of each assigned family
+(<=2 groups, d_model<=512, <=4 experts) runs one forward/train step and one
+decode step on CPU; asserts output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, PAPER_MODELS
+from repro.models import model as M
+from repro.models.transformer import init_cache
+
+ALL = {**ARCHS, **PAPER_MODELS}
+
+
+def _smoke_cfg(name):
+    cfg = ALL[name].reduced(d_model=128)
+    return cfg
+
+
+def _batch(cfg, b=2, s=16, key=0):
+    k = jax.random.PRNGKey(key)
+    batch = {"tokens": jax.random.randint(k, (b, s), 0, cfg.vocab_size)}
+    if cfg.encoder_decoder:
+        batch["encoder_frames"] = jax.random.normal(
+            k, (b, cfg.encoder_len, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("name", sorted(ALL))
+def test_smoke_forward_and_loss(name):
+    cfg = _smoke_cfg(name)
+    assert cfg.d_model <= 512 and cfg.n_groups <= 2
+    assert not cfg.is_moe or cfg.n_experts <= 4
+    p = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits = jax.jit(M.forward_train, static_argnums=(1,))(p, cfg, batch)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{name}: non-finite logits"
+    loss, grads = jax.value_and_grad(
+        lambda pp: M.loss_fn(pp, cfg, batch))(p)
+    assert np.isfinite(float(loss)), name
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert bool(jnp.isfinite(gnorm)), f"{name}: non-finite grads"
+
+
+@pytest.mark.parametrize("name", sorted(ALL))
+def test_smoke_serve_step(name):
+    cfg = _smoke_cfg(name)
+    p = M.init_params(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 12
+    batch = _batch(cfg, b, s)
+    cache = init_cache(cfg, b, 32)
+    kw = {}
+    if cfg.encoder_decoder:
+        kw["encoder_frames"] = batch["encoder_frames"]
+    lg, cache = M.prefill(p, cfg, batch["tokens"], cache, **kw)
+    assert lg.shape == (b, cfg.vocab_size)
+    assert bool(jnp.isfinite(lg).all()), name
+    tok = jnp.argmax(lg, -1)[:, None]
+    lg2, cache = jax.jit(M.decode_step, static_argnums=(1,))(p, cfg, cache,
+                                                             tok)
+    assert lg2.shape == (b, cfg.vocab_size)
+    assert bool(jnp.isfinite(lg2).all()), name
+    assert (np.asarray(cache["pos"]) == s + 1).all()
+
+
+def test_full_config_param_counts():
+    """Full (non-reduced) configs match their public parameter counts."""
+    expect = {
+        "chameleon-34b": (34e9, 0.10),
+        "phi3.5-moe-42b-a6.6b": (42e9, 0.10),
+        "phi3-medium-14b": (14e9, 0.10),
+        "recurrentgemma-2b": (2.7e9, 0.30),
+        "llama3-405b": (405e9, 0.05),
+        "whisper-base": (72e6, 0.35),
+        "llama4-maverick-400b-a17b": (400e9, 0.15),
+        "gemma3-12b": (12e9, 0.20),
+        "rwkv6-7b": (7e9, 0.30),
+        "starcoder2-7b": (7e9, 0.15),
+        "mixtral-8x7b": (46.7e9, 0.03),
+        "mixtral-8x22b": (141e9, 0.03),
+        "mistral-7b": (7.2e9, 0.03),
+    }
+    for name, (target, tol) in expect.items():
+        got = ALL[name].param_count()
+        assert abs(got - target) / target < tol, (name, got / 1e9)
+
+
+def test_active_params_moe():
+    moe = ALL["phi3.5-moe-42b-a6.6b"]
+    assert 5e9 < moe.active_param_count() < 9e9
+    mav = ALL["llama4-maverick-400b-a17b"]
+    assert mav.active_param_count() < 30e9

@@ -1,0 +1,81 @@
+"""Unit tests for the dry-run HLO parsing + roofline derivation tools."""
+import pytest
+
+from repro.launch.dryrun import parse_collectives, shape_bytes
+
+HLO_SNIPPET = """
+HloModule jit_serve_fn
+%fused (p0: bf16[8,128]) -> bf16[8,128] {
+  ROOT %x = bf16[8,128]{1,0} parameter(0)
+}
+ENTRY %main {
+  %ag = bf16[16,2048]{1,0} all-gather(%p), replica_groups=...
+  %ar.1 = f32[4,256]{1,0} all-reduce(%q), to_apply=%add
+  %rs = f32[2,128]{1,0} reduce-scatter(%r), dimensions={0}
+  %a2a = bf16[8,64,32]{2,1,0} all-to-all(%s), dimensions={0}
+  %cp = u32[16]{0} collective-permute(%t), source_target_pairs=...
+  %ags = (bf16[4,4]{1,0}, bf16[4,4]{1,0}) all-gather-start(%u)
+  %dot = f32[128,128]{1,0} dot(%a, %b)
+}
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("bf16[16,2048]") == 16 * 2048 * 2
+    assert shape_bytes("f32[4,256]") == 4 * 256 * 4
+    assert shape_bytes("u32[16]") == 64
+    assert shape_bytes("pred[8]") == 8
+
+
+def test_parse_collectives_kinds_and_bytes():
+    r = parse_collectives(HLO_SNIPPET)
+    b = r["bytes"]
+    assert b["all-gather"] == 16 * 2048 * 2
+    assert b["all-reduce"] == 4 * 256 * 4
+    assert b["reduce-scatter"] == 2 * 128 * 4
+    assert b["all-to-all"] == 8 * 64 * 32 * 2
+    assert b["collective-permute"] == 16 * 4
+    assert r["counts"]["all-gather"] == 1
+    assert r["total_bytes"] == sum(b.values())
+    # the dot must not be counted
+    assert "dot" not in b
+
+
+def test_roofline_model_flops_orders():
+    from benchmarks.roofline import model_bytes, model_flops
+    from repro.configs import get_config
+    from repro.configs.base import INPUT_SHAPES
+    cfg = get_config("llama3-405b")
+    tr = model_flops(cfg, INPUT_SHAPES["train_4k"])
+    pf = model_flops(cfg, INPUT_SHAPES["prefill_32k"])
+    dc = model_flops(cfg, INPUT_SHAPES["decode_32k"])
+    # train ~ 6ND, prefill ~ 2ND(+attn), decode tiny
+    assert tr > pf > dc > 0
+    n, d_train = cfg.param_count(), 256 * 4096
+    assert abs(tr - 6 * n * d_train) / (6 * n * d_train) < 0.01
+    assert model_bytes(cfg, INPUT_SHAPES["decode_32k"]) > \
+        cfg.active_param_count() * 2   # weights + KV
+
+
+def test_roofline_moe_uses_active_params():
+    from benchmarks.roofline import model_flops
+    from repro.configs import get_config
+    from repro.configs.base import INPUT_SHAPES
+    moe = get_config("llama4-maverick-400b-a17b")
+    dense = get_config("llama3-405b")
+    # similar total size, but MoE decode flops ~ active params only
+    f_moe = model_flops(moe, INPUT_SHAPES["decode_32k"])
+    f_dense = model_flops(dense, INPUT_SHAPES["decode_32k"])
+    assert f_moe < f_dense / 5
+
+
+def test_analytic_collectives_decode_weight_stationary():
+    """Post-optimization decode traffic is activation-scale, not weights."""
+    from benchmarks.roofline import analytic_collective_bytes
+    from repro.configs import get_config
+    from repro.configs.base import INPUT_SHAPES
+    cfg = get_config("llama3-405b")
+    dec = analytic_collective_bytes(cfg, INPUT_SHAPES["decode_32k"], 256)
+    assert dec < cfg.param_bytes() / 256        # far below weight movement
+    tr = analytic_collective_bytes(cfg, INPUT_SHAPES["train_4k"], 256)
+    assert tr > dec                             # train still streams weights

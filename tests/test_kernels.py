@@ -1,0 +1,129 @@
+"""Per-kernel allclose tests: sweep shapes/dtypes, compare the Pallas
+kernel (interpret mode on CPU) against the pure-jnp ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(shape, dtype, key=KEY):
+    return jax.random.normal(key, shape).astype(dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,hq,hkv,sq,skv,d,causal,window", [
+    (1, 4, 2, 128, 128, 64, True, None),
+    (2, 2, 1, 256, 256, 128, True, None),
+    (1, 4, 4, 128, 128, 64, True, 40),     # sliding window
+    (1, 2, 2, 100, 100, 64, True, None),   # non-multiple seq (padding)
+    (2, 8, 2, 128, 128, 64, False, None),  # bidirectional (encoder)
+])
+def test_flash_attention(dtype, b, hq, hkv, sq, skv, d, causal, window):
+    ks = jax.random.split(KEY, 3)
+    q = _rand((b, hq, sq, d), dtype, ks[0])
+    k = _rand((b, hkv, skv, d), dtype, ks[1])
+    v = _rand((b, hkv, skv, d), dtype, ks[2])
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=64, block_k=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,hq,hkv,m,skv,d,window", [
+    (2, 4, 2, 1, 256, 64, None),     # plain decode
+    (2, 4, 2, 5, 256, 64, None),     # speculative verify (n_cand=4)
+    (1, 8, 1, 4, 512, 128, None),    # MQA
+    (2, 2, 2, 3, 300, 64, None),     # non-multiple cache length
+    (1, 4, 2, 4, 256, 64, 64),       # sliding window cache
+])
+def test_decode_attention(dtype, b, hq, hkv, m, skv, d, window):
+    ks = jax.random.split(KEY, 4)
+    q = _rand((b, hq, m, d), dtype, ks[0])
+    k = _rand((b, hkv, skv, d), dtype, ks[1])
+    v = _rand((b, hkv, skv, d), dtype, ks[2])
+    lengths = jax.random.randint(ks[3], (b,), m + 8,
+                                 skv + 1).astype(jnp.int32)
+    got = ops.decode_attention(q, k, v, lengths, window=window,
+                               block_k=64, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, lengths, window=window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("e,c,d,f", [
+    (4, 128, 64, 256),
+    (2, 100, 128, 300),     # non-multiples (padding)
+    (8, 64, 32, 128),
+])
+def test_moe_ffn(dtype, e, c, d, f):
+    ks = jax.random.split(KEY, 4)
+    buf = _rand((e, c, d), dtype, ks[0])
+    wg = _rand((e, d, f), dtype, ks[1]) * 0.1
+    wu = _rand((e, d, f), dtype, ks[2]) * 0.1
+    wd = _rand((e, f, d), dtype, ks[3]) * 0.1
+    got = ops.moe_ffn(buf, wg, wu, wd, block_c=64, block_f=128,
+                      interpret=True)
+    want = ref.moe_ffn_ref(buf, wg, wu, wd)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("b,s,w", [(2, 64, 256), (1, 128, 100), (4, 32, 512)])
+def test_rglru_scan(b, s, w):
+    ks = jax.random.split(KEY, 3)
+    a = jax.nn.sigmoid(_rand((b, s, w), jnp.float32, ks[0]))
+    g = _rand((b, s, w), jnp.float32, ks[1])
+    h0 = _rand((b, w), jnp.float32, ks[2])
+    got = ops.rglru_scan(a, g, h0, block_w=128, interpret=True)
+    want = ref.rglru_scan_ref(a, g, h0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,h,s,hd", [(1, 2, 32, 64), (2, 4, 16, 64),
+                                      (1, 1, 64, 128)])
+def test_wkv6(b, h, s, hd):
+    ks = jax.random.split(KEY, 6)
+    r = _rand((b, h, s, hd), jnp.float32, ks[0])
+    k = _rand((b, h, s, hd), jnp.float32, ks[1])
+    v = _rand((b, h, s, hd), jnp.float32, ks[2])
+    w = jax.nn.sigmoid(_rand((b, h, s, hd), jnp.float32, ks[3]))
+    u = _rand((h, hd), jnp.float32, ks[4]) * 0.1
+    s0 = _rand((b, h, hd, hd), jnp.float32, ks[5]) * 0.1
+    got_y, got_s = ops.wkv6(r, k, v, w, u, s0, interpret=True)
+    want_y, want_s = ref.wkv6_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(got_y), np.asarray(want_y),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_matches_model_attention():
+    """Kernel output equals the model's chunked-attention path."""
+    from repro.models.attention import attention_chunked
+    b, hq, hkv, s, d = 2, 4, 2, 96, 64
+    ks = jax.random.split(KEY, 3)
+    q = _rand((b, s, hq, d), jnp.float32, ks[0])
+    k = _rand((b, s, hkv, d), jnp.float32, ks[1])
+    v = _rand((b, s, hkv, d), jnp.float32, ks[2])
+    pos = jnp.arange(s)
+    model_out = attention_chunked(q, k, v, pos, pos, d ** -0.5,
+                                  kv_chunk=32)
+    kern_out = ops.flash_attention(q.transpose(0, 2, 1, 3),
+                                   k.transpose(0, 2, 1, 3),
+                                   v.transpose(0, 2, 1, 3),
+                                   block_q=32, block_k=32, interpret=True)
+    kern_out = kern_out.transpose(0, 2, 1, 3).reshape(b, s, hq * d)
+    np.testing.assert_allclose(np.asarray(kern_out), np.asarray(model_out),
+                               rtol=2e-4, atol=2e-4)

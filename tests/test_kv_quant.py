@@ -1,0 +1,78 @@
+"""int8-quantized KV cache: accuracy, losslessness-within-itself, memory."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.transformer import init_cache
+
+from conftest import tiny_config, tiny_draft_config
+
+
+def _cfgs():
+    fp = tiny_config(("attn",))
+    return fp, dataclasses.replace(fp, kv_cache_dtype="int8")
+
+
+def test_int8_kv_close_to_fp_and_greedy_identical(jitted):
+    fp, q8 = _cfgs()
+    p = M.init_params(fp, jax.random.PRNGKey(0))
+    B, L, T = 2, 10, 6
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, L + T), 0, 61)
+
+    def run(cfg):
+        c = init_cache(cfg, B, 24)
+        lg, c = jitted["prefill"](p, cfg, toks[:, :L], c)
+        outs = [lg]
+        for t in range(T):
+            lg, c = jitted["decode_step"](p, cfg, c, toks[:, L + t:L + t + 1])
+            outs.append(lg)
+        return jnp.stack(outs)
+
+    a, b = run(fp), run(q8)
+    rel = float((jnp.abs(a - b) / (jnp.abs(a) + 1)).max())
+    assert rel < 0.05, rel
+    assert (jnp.argmax(a, -1) == jnp.argmax(b, -1)).all()
+
+
+def test_int8_kv_spec_decode_self_consistent(jitted):
+    """Spec decoding against the int8-cached target equals that target's
+    own greedy decoding (losslessness is w.r.t. the same cache numerics)."""
+    from conftest import greedy_reference
+    from repro.core.spec_decode import spec_round
+    _, q8 = _cfgs()
+    dcfg = tiny_draft_config()
+    tp = M.init_params(q8, jax.random.PRNGKey(1))
+    dp = M.init_params(dcfg, jax.random.PRNGKey(2))
+    B, L, T, m = 2, 8, 10, 3
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, L), 0, 61)
+    ref = greedy_reference(tp, q8, toks, T, 64, jitted)
+    tc, dc = init_cache(q8, B, 64), init_cache(dcfg, B, 64)
+    lg, tc = jitted["prefill"](tp, q8, toks, tc)
+    _, dc = jitted["prefill"](dp, dcfg, toks, dc)
+    t_next = jnp.argmax(lg, -1)
+    spec = jax.jit(spec_round, static_argnames=(
+        "target_cfg", "draft_cfg", "n_cand", "mesh", "sample"))
+    outs = [[int(t_next[i])] for i in range(B)]
+    for _ in range(20):
+        if min(len(o) for o in outs) >= T:
+            break
+        r = spec(tp, q8, tc, dp, dcfg, dc, t_next, m)
+        tc, dc, t_next = r["target_cache"], r["draft_cache"], r["t_next"]
+        for i in range(B):
+            for j in range(int(r["n_emitted"][i])):
+                outs[i].append(int(r["tokens"][i, j]))
+    for i in range(B):
+        assert outs[i][:T] == list(np.asarray(ref[i, :T]))
+
+
+def test_int8_cache_memory_halved():
+    fp, q8 = _cfgs()
+    a = init_cache(fp, 2, 64)
+    b = init_cache(q8, 2, 64)
+    bytes_of = lambda c: sum(x.size * x.dtype.itemsize
+                             for x in jax.tree.leaves(c["layers"]))
+    # int8 values + f32 per-row scales vs fp cache
+    assert bytes_of(b) < 0.75 * bytes_of(a)

@@ -1,0 +1,136 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import MISTRAL_7B, MIXTRAL_8X7B
+from repro.core.placement import plan_placement
+from repro.core.planner import ParaSpecPlanner, Policy, Workload
+from repro.core.spec_decode import (acceptance_pmf, expected_generated,
+                                    greedy_acceptance)
+from repro.models.attention import attention_mask, ring_slot_positions
+from repro.sim.hardware import ENV1, ENV2
+
+probs = st.floats(0.0, 1.0, allow_nan=False)
+cands = st.integers(1, 16)
+
+
+@given(probs, cands)
+@settings(deadline=None)
+def test_expected_generated_bounds(p, m):
+    e = expected_generated(p, m)
+    assert 1.0 - 1e-9 <= e <= m + 1 + 1e-9
+
+
+@given(probs, cands)
+@settings(deadline=None)
+def test_pmf_sums_to_one_and_matches_expectation(p, m):
+    pmf = np.asarray(acceptance_pmf(p, m))
+    assert abs(pmf.sum() - 1.0) < 1e-6
+    mean = float((np.arange(1, m + 2) * pmf).sum())
+    assert abs(mean - expected_generated(p, m)) < 1e-5
+
+
+@given(st.integers(0, 1000), st.integers(1, 64))
+@settings(deadline=None)
+def test_ring_slot_positions_invariants(length, window):
+    """Slot j holds the latest logical position ≡ j (mod W) below length."""
+    pj = np.asarray(ring_slot_positions(window, length, window))
+    j = np.arange(window)
+    if length > 0:
+        valid = pj >= 0
+        assert (pj[valid] % window == j[valid]).all()
+        assert (pj <= length - 1).all()
+        assert (pj[valid] > length - 1 - window).all()
+        # exactly min(length, window) valid slots
+        assert valid.sum() == min(length, window)
+    else:
+        assert (pj < 0).all()
+
+
+@given(st.integers(1, 12), st.integers(1, 24),
+       st.one_of(st.none(), st.integers(1, 8)), st.integers(0, 50))
+@settings(deadline=None, max_examples=40)
+def test_attention_mask_is_causal_and_windowed(sq, skv, window, offset):
+    qp = jnp.arange(sq) + offset
+    kp = jnp.arange(skv)
+    mask = np.asarray(attention_mask(qp, kp, window))
+    for i in range(sq):
+        for j in range(skv):
+            allowed = mask[i, j] == 0.0
+            should = j <= i + offset and (window is None or
+                                          j > i + offset - window)
+            assert allowed == should
+
+
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(2, 30),
+       st.integers(0, 2 ** 31 - 1))
+@settings(deadline=None, max_examples=30)
+def test_greedy_acceptance_matches_bruteforce(b, m, vocab, seed):
+    rng = np.random.default_rng(seed)
+    drafts = jnp.asarray(rng.integers(0, vocab, (b, m)), jnp.int32)
+    logits = jnp.asarray(rng.normal(size=(b, m + 1, vocab)), jnp.float32)
+    a, nxt, nc = greedy_acceptance(drafts, logits)
+    g = np.argmax(np.asarray(logits), -1)
+    for i in range(b):
+        k = 0
+        while k < m and int(drafts[i, k]) == int(g[i, k]):
+            k += 1
+        assert int(a[i]) == k
+        assert int(nxt[i]) == int(g[i, k])
+        assert int(nc[i]) == k + 1
+
+
+@given(st.sampled_from([16, 32, 50, 80, 96]),
+       st.sampled_from([32, 64, 128, 192, 256]),
+       st.sampled_from([4, 5, 6, 8, 10]),
+       st.sampled_from([1, 2, 4, 6, 8]),
+       st.floats(0.1, 0.95))
+@settings(deadline=None, max_examples=30)
+def test_planner_report_invariants(bp, bd, bdr, m, p):
+    pl = ParaSpecPlanner(MIXTRAL_8X7B, MISTRAL_7B, ENV1)
+    rep = pl.evaluate(Policy(bp, bd, min(bdr, bd), m),
+                      Workload(300, 32, p))
+    assert rep.throughput > 0
+    assert rep.t_prefill > 0 and rep.t_decode > 0
+    assert rep.t_decode >= 2 * max(rep.t_target, rep.t_draft) - 1e-9
+    assert 1.0 <= rep.expected_tokens <= m + 1
+
+
+@given(st.sampled_from(["env1", "env2"]))
+@settings(deadline=None, max_examples=4)
+def test_placement_respects_capacities(env):
+    from repro.sim.hardware import ENVS
+    hw = ENVS[env]
+    for cfg in (MIXTRAL_8X7B,):
+        plan = plan_placement(cfg, MISTRAL_7B, hw)
+        assert plan.bytes_in("hbm") <= plan.hbm_capacity
+        assert plan.bytes_in("host") <= plan.host_capacity
+        # draft model is HBM-resident (the paper's key placement decision)
+        assert plan.tier_of("draft/params") == "hbm"
+        # double-buffered stream slots exist
+        assert plan.tier_of("target/stream_slot0") == "hbm"
+        assert plan.tier_of("target/stream_slot1") == "hbm"
+
+
+@given(st.integers(2, 40), st.integers(1, 4), st.integers(2, 8),
+       st.integers(0, 2 ** 31 - 1))
+@settings(deadline=None, max_examples=20)
+def test_moe_dropless_keeps_every_assignment(n, k, e, seed):
+    from repro.models.moe import _capacity, _dispatch
+    k = min(k, e)
+    rng = np.random.default_rng(seed)
+    idx = jnp.asarray(
+        np.stack([rng.choice(e, size=k, replace=False) for _ in range(n)]),
+        jnp.int32)
+    x = jnp.asarray(rng.normal(size=(n, 8)), jnp.float32)
+    cap = _capacity(n, k, e, float("inf"))
+    buf, slot = _dispatch(x, idx, e, cap)
+    assert (np.asarray(slot) >= 0).all()      # dropless: nothing dropped
+    # every (token, expert) assignment is recoverable from the buffer
+    for t in range(n):
+        for j in range(k):
+            got = np.asarray(buf[int(idx[t, j]), int(slot[t, j])])
+            np.testing.assert_allclose(got, np.asarray(x[t]), rtol=1e-6)

@@ -1,0 +1,129 @@
+"""Speculative decoding: losslessness vs pure greedy decoding; the
+acceptance model of Appendix A.1."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.spec_decode import (acceptance_pmf, expected_generated,
+                                    greedy_acceptance, sampled_acceptance,
+                                    spec_round)
+from repro.models import model as M
+from repro.models.transformer import init_cache
+
+from conftest import greedy_reference, tiny_config, tiny_draft_config
+
+TARGETS = {
+    "dense": dict(pattern=("attn",)),
+    "swa": dict(pattern=("swa",)),
+    "hybrid": dict(pattern=("rglru", "rglru", "swa"), arch="hybrid",
+                   n_layers=3),
+    "rwkv": dict(pattern=("rwkv",), arch="ssm"),
+    "moe": dict(pattern=("attn",), arch="moe", n_experts=4, top_k=2,
+                moe_dropless=True),
+}
+
+
+@pytest.fixture(scope="module")
+def spec_jit():
+    return jax.jit(spec_round,
+                   static_argnames=("target_cfg", "draft_cfg", "n_cand",
+                                    "mesh", "sample"))
+
+
+@pytest.mark.parametrize("family", list(TARGETS))
+def test_spec_decode_lossless(family, jitted, spec_jit):
+    kw = dict(TARGETS[family])
+    tcfg = tiny_config(kw.pop("pattern"), kw.pop("arch", "dense"),
+                       kw.pop("n_layers", None), **kw)
+    dcfg = tiny_draft_config(tcfg.vocab_size)
+    tp = M.init_params(tcfg, jax.random.PRNGKey(1))
+    dp = M.init_params(dcfg, jax.random.PRNGKey(2))
+    B, L, T, m = 3, 8, 16, 3
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, L), 0,
+                              tcfg.vocab_size)
+    maxlen = L + T + 3 * (m + 1) + 4
+
+    ref = greedy_reference(tp, tcfg, toks, T, maxlen, jitted)
+
+    tc = init_cache(tcfg, B, maxlen)
+    dc = init_cache(dcfg, B, maxlen)
+    lg, tc = jitted["prefill"](tp, tcfg, toks, tc)
+    _, dc = jitted["prefill"](dp, dcfg, toks, dc)
+    t_next = jnp.argmax(lg, -1)
+    outs = [[int(t_next[b])] for b in range(B)]
+    rounds = 0
+    while min(len(o) for o in outs) < T and rounds < 40:
+        r = spec_jit(tp, tcfg, tc, dp, dcfg, dc, t_next, m)
+        tc, dc, t_next = r["target_cache"], r["draft_cache"], r["t_next"]
+        toks_r = np.asarray(r["tokens"])
+        for b in range(B):
+            for i in range(int(r["n_emitted"][b])):
+                outs[b].append(int(toks_r[b, i]))
+        rounds += 1
+    for b in range(B):
+        assert outs[b][:T] == list(np.asarray(ref[b, :T])), family
+
+
+def test_acceptance_model_matches_simulation():
+    """Paper Eq. 10-12: pmf sums to 1 and E[n] matches Monte-Carlo."""
+    rng = np.random.default_rng(0)
+    for p in (0.0, 0.3, 0.7, 0.95):
+        for m in (1, 4, 8):
+            pmf = np.asarray(acceptance_pmf(p, m))
+            assert abs(pmf.sum() - 1.0) < 1e-6
+            e = expected_generated(p, m)
+            draws = rng.random((200_000, m)) < p
+            prefix = np.cumprod(draws, axis=1).sum(1)
+            mc = (prefix + 1).mean()
+            assert abs(e - mc) < 0.02, (p, m, e, mc)
+
+
+def test_expected_generated_monotonic():
+    for m in (1, 2, 4, 8):
+        es = [expected_generated(p, m) for p in np.linspace(0, 1, 11)]
+        assert all(b >= a - 1e-9 for a, b in zip(es, es[1:]))
+        assert abs(es[0] - 1.0) < 1e-9
+        assert abs(es[-1] - (m + 1)) < 1e-9
+
+
+def test_greedy_acceptance_rule():
+    drafts = jnp.array([[5, 6, 7], [5, 9, 7]])
+    V = 12
+    tl = jnp.full((2, 4, V), -10.0)
+    # target greedy: row0 -> [5,6,7,8] (accept all); row1 -> [5,6,...]
+    for b, seq in enumerate([[5, 6, 7, 8], [5, 6, 7, 8]]):
+        for i, t in enumerate(seq):
+            tl = tl.at[b, i, t].set(10.0)
+    a, nxt, nc = greedy_acceptance(drafts, tl)
+    assert list(a) == [3, 1]        # row1: d1=5 ok, d2=9 != g1=6
+    assert list(nxt) == [8, 6]      # bonus / correction token
+    assert list(nc) == [4, 2]
+
+
+def test_sampled_acceptance_lossless_distribution():
+    """When draft == target distribution, acceptance prob is ~1."""
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(key, (64, 4, 16)) * 2
+    drafts = jnp.argmax(logits[:, :3], -1)
+    a, nxt, nc = sampled_acceptance(drafts, logits[:, :3], logits, key)
+    assert float(a.mean()) > 2.0  # nearly all accepted
+
+
+def test_spec_round_emits_between_1_and_m_plus_1(jitted, spec_jit):
+    tcfg = tiny_config(("attn",))
+    dcfg = tiny_draft_config(tcfg.vocab_size)
+    tp = M.init_params(tcfg, jax.random.PRNGKey(1))
+    dp = M.init_params(dcfg, jax.random.PRNGKey(2))
+    B, L, m = 4, 6, 4
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, L), 0, 61)
+    tc = init_cache(tcfg, B, 64)
+    dc = init_cache(dcfg, B, 64)
+    lg, tc = jitted["prefill"](tp, tcfg, toks, tc)
+    _, dc = jitted["prefill"](dp, dcfg, toks, dc)
+    r = spec_jit(tp, tcfg, tc, dp, dcfg, dc, jnp.argmax(lg, -1), m)
+    ne = np.asarray(r["n_emitted"])
+    assert ((ne >= 1) & (ne <= m + 1)).all()
+    assert (np.asarray(r["target_cache"]["pos"]) ==
+            L + ne).all()
+    assert (np.asarray(r["draft_cache"]["pos"]) == L + ne).all()
