@@ -19,6 +19,12 @@ def main() -> None:
         from benchmarks import microbench
         microbench.run(rows)
 
+    if "--serving" in sys.argv:
+        # Poisson-trace continuous-batching benchmark (compiles the real
+        # reduced-scale engine — seconds, not milliseconds; opt-in)
+        from benchmarks import serving_bench
+        serving_bench.run(rows)
+
     print("name,value,derived")
     for name, val, derived in rows:
         print(f"{name},{val:.4f},{derived}")

@@ -1,36 +1,39 @@
-"""End-to-end serving driver (deliverable b): batched requests through the
-full SpecOffload engine — offline placement, zig-zag prefill, dual-batch
-interleaved decode with speculative verification.
+"""End-to-end serving driver (deliverable b): a Poisson request trace
+through the full SpecOffload engine — offline placement, zig-zag prefill,
+dual-batch interleaved decode with speculative verification, and the
+continuous-batching scheduler (EOS retirement + mid-flight admission).
 
     PYTHONPATH=src python examples/serve_spec_offload.py [--arch mixtral-8x7b]
 
 Uses the reduced config of the chosen architecture so it runs on CPU; the
-pipeline structure (placement plan, interleaved batches, rollback) is the
-production one.
+pipeline structure (placement plan, interleaved batches, rollback, slot
+scheduler) is the production one.
 """
 import argparse
-import time
 
 import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import MISTRAL_7B
 from repro.data.pipeline import synthetic_dataset
-from repro.serving.engine import ServeRequest, ServingEngine
+from repro.serving.engine import (SchedulerConfig, ServingEngine,
+                                  latency_percentiles)
+from repro.serving.trace import poisson_requests
 from repro.sim.hardware import ENV1
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="mixtral-8x7b")
 ap.add_argument("--requests", type=int, default=8)
 ap.add_argument("--gen", type=int, default=12)
+ap.add_argument("--rate", type=float, default=2.0, help="req/s (Poisson)")
 args = ap.parse_args()
 
 tcfg = get_config(args.arch).reduced(d_model=128)
 dcfg = MISTRAL_7B.reduced(d_model=64, vocab=tcfg.vocab_size)
 
-print(f"target: {tcfg.name} ({sum(1 for _ in range(1))}x reduced) | "
-      f"draft: {dcfg.name}")
-eng = ServingEngine(tcfg, dcfg, ENV1, n_cand=3, batch_size=2)
+print(f"target: {tcfg.name} (reduced) | draft: {dcfg.name}")
+eng = ServingEngine(tcfg, dcfg, ENV1,
+                    config=SchedulerConfig(max_batch=2, n_cand=3))
 eng.init_from_seed(0)
 
 plan = eng.engine.placement
@@ -40,12 +43,20 @@ for note in plan.notes:
 
 ds = synthetic_dataset("samsum", n_prompts=args.requests,
                        vocab=tcfg.vocab_size)
-for i, p in enumerate(ds.prompts):
-    eng.submit(ServeRequest(i, p[:24], max_new_tokens=args.gen))
+rng = np.random.default_rng(1)
+gens = rng.integers(max(2, args.gen // 2), args.gen + 1, args.requests)
+reqs = poisson_requests([p[:24] for p in ds.prompts], gens.tolist(),
+                        args.rate)
+for r in reqs:
+    eng.submit(r)
 
-t0 = time.time()
 done = eng.run()
-dt = time.time() - t0
+st = eng.stats()
 toks = sum(len(r.result) for r in done)
-print(f"\nserved {len(done)} requests / {toks} tokens in {dt:.1f}s")
+print(f"\nserved {len(done)} requests / {toks} tokens in "
+      f"{st['wall_s']:.1f}s ({eng.throughput(done):.2f} tok/s)")
+print(f"occupancy={st['mean_occupancy']:.2f}, rounds={st['rounds']}, "
+      f"fused compiles={st['fused_compiles']}")
+print("ttft:", latency_percentiles(done, "ttft_s"))
+print("e2e: ", latency_percentiles(done, "latency_s"))
 print("first result tokens:", np.asarray(done[0].result).tolist())

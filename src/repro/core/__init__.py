@@ -8,7 +8,8 @@
 - ``offload``      — host<->HBM weight streaming with memory_kind tiers.
 - ``pipeline``     — SpecOffloadEngine tying it all together (§3).
 """
-from repro.core.interleave import InterleavedPipeline, fused_verify_and_draft
+from repro.core.interleave import (BatchState, InterleavedPipeline,
+                                   RoundOutput, fused_verify_and_draft)
 from repro.core.pipeline import SpecOffloadEngine
 from repro.core.placement import PlacementPlan, plan_placement
 from repro.core.planner import ParaSpecPlanner, Policy, Workload
@@ -16,7 +17,8 @@ from repro.core.spec_decode import (expected_generated, greedy_acceptance,
                                     sampled_acceptance, spec_round)
 
 __all__ = [
-    "InterleavedPipeline", "fused_verify_and_draft", "SpecOffloadEngine",
+    "BatchState", "InterleavedPipeline", "RoundOutput",
+    "fused_verify_and_draft", "SpecOffloadEngine",
     "PlacementPlan", "plan_placement", "ParaSpecPlanner", "Policy",
     "Workload", "expected_generated", "greedy_acceptance",
     "sampled_acceptance", "spec_round",

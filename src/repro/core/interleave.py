@@ -7,20 +7,36 @@ A.2); in JAX the same concurrency is expressed as ONE fused jit step that
 contains both computations — XLA schedules the draft model's matmuls into
 the slack left by the target's streamed-weight copies (DESIGN.md §2).
 
-``InterleavedPipeline.step()`` therefore performs, per call:
+Stepwise API (continuous-batching ready)
+----------------------------------------
+The pipeline is externally drivable, one rotation round at a time:
 
-    verify(target, batch_V)   +   draft_generate(draft, batch_D)
+* :meth:`InterleavedPipeline.warmup` — slot t_0 of the paper's Figure 4:
+  draft candidates for one batch so it can be verified next round.
+* :meth:`InterleavedPipeline.step` — one fused round: verify the batch
+  that holds drafts while drafting for the other; returns a
+  :class:`RoundOutput` with per-sequence emitted tokens.  The caller owns
+  the rotation (swap the two states between calls) and may mutate
+  per-slot state *between* steps — the verified batch's ``drafts`` is
+  ``None`` on return, which is the safe window for a scheduler to retire
+  finished sequences and splice newly prefilled ones into freed cache
+  slots (see :mod:`repro.serving.engine`).
+* :meth:`InterleavedPipeline.run` — the original blocking loop, now a
+  thin driver over ``warmup`` + ``step``.
 
-and swaps the roles afterwards.  A warm-up call drafts for batch 0 only
-(slot t_0 of the paper's Figure 4).
+All shapes inside ``step`` are fixed by ``(batch, n_cand)``, so the fused
+jit program compiles exactly once per pipeline regardless of how many
+sequences retire or join across rounds (``trace_counts`` exposes the
+compile tally for tests).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.spec_decode import (draft_generate, greedy_acceptance,
@@ -37,6 +53,14 @@ class BatchState:
     drafts: jax.Array | None     # (B, m) candidates awaiting verification
     draft_pendings: list | None  # rollback info for the draft steps
     emitted: list                # python-side: list of (tokens, n_emitted)
+
+
+@dataclass
+class RoundOutput:
+    """Host-side result of one verified rotation round (one batch)."""
+    tokens: np.ndarray           # (B, m+1) output slots (d_1..d_a, bonus, 0s)
+    n_emitted: np.ndarray        # (B,) in [1, m+1]: valid prefix of tokens
+    n_accept: np.ndarray         # (B,) accepted draft tokens this round
 
 
 def fused_verify_and_draft(target_params, target_cfg: ModelConfig,
@@ -78,8 +102,14 @@ def fused_verify_and_draft(target_params, target_cfg: ModelConfig,
 
 
 class InterleavedPipeline:
-    """Runs the dual-batch rotation until every sequence has ``gen_len``
-    tokens.  Pure orchestration — all heavy work happens in jitted steps."""
+    """Dual-batch rotation, drivable one round at a time.
+
+    Pure orchestration — all heavy work happens in jitted steps whose
+    shapes depend only on ``(batch, n_cand)``.  ``trace_counts`` records
+    how many times each jitted entry point was (re)traced; a scheduler
+    that keeps shapes stable should see ``trace_counts['fused'] == 1``
+    for the whole serving lifetime.
+    """
 
     def __init__(self, target_params, target_cfg, draft_params, draft_cfg,
                  n_cand: int, mesh=None):
@@ -87,24 +117,77 @@ class InterleavedPipeline:
         self.dp, self.dcfg = draft_params, draft_cfg
         self.n_cand = n_cand
         self.mesh = mesh
+        self.trace_counts = {"fused": 0, "draft": 0, "rollback": 0}
         self._fused = jax.jit(
-            fused_verify_and_draft,
+            self._counted("fused", fused_verify_and_draft),
             static_argnames=("target_cfg", "draft_cfg", "n_cand", "mesh"))
         self._draft_only = jax.jit(
-            draft_generate, static_argnames=("cfg", "n_cand", "mesh"))
+            self._counted("draft", draft_generate),
+            static_argnames=("cfg", "n_cand", "mesh"))
         self._rollback = jax.jit(
-            rollback_draft, static_argnames=("cfg",))
+            self._counted("rollback", rollback_draft),
+            static_argnames=("cfg",))
+
+    def _counted(self, name, fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            self.trace_counts[name] += 1   # runs only while tracing
+            return fn(*args, **kwargs)
+        return wrapper
+
+    # ------------------------------------------------------------------
+    def warmup(self, state: BatchState) -> None:
+        """Slot t_0 (Fig. 4): draft candidates for ``state`` so the next
+        :meth:`step` can verify it.  No-op if drafts are already staged."""
+        if state.drafts is not None:
+            return
+        d, _, dc, pend = self._draft_only(self.dp, self.dcfg,
+                                          state.draft_cache, state.t_next,
+                                          self.n_cand)
+        state.drafts, state.draft_cache, state.draft_pendings = d, dc, pend
+
+    def step(self, verify: BatchState, gen: BatchState,
+             record: bool = True) -> RoundOutput:
+        """One rotation round: verify ``verify``'s staged drafts while
+        drafting fresh candidates for ``gen`` (one fused XLA program).
+
+        Mutates both states in place; on return ``verify.drafts is None``
+        (the safe window for slot surgery) and ``gen`` holds new drafts.
+        ``record=False`` skips appending to ``verify.emitted`` — use it
+        when the caller does its own per-slot bookkeeping, so a
+        long-running server doesn't grow the emitted log unboundedly.
+        """
+        assert verify.drafts is not None, "verify batch has no staged drafts"
+        assert gen.drafts is None, "gen batch already holds drafts"
+        vstate = {"target_cache": verify.target_cache,
+                  "t_next": verify.t_next, "drafts": verify.drafts}
+        dstate = {"draft_cache": gen.draft_cache, "t_next": gen.t_next}
+        vout, dout = self._fused(self.tp, self.tcfg, self.dp, self.dcfg,
+                                 vstate, dstate, self.n_cand, self.mesh)
+        # batch V: commit + roll its draft cache back to acceptance
+        verify.target_cache = vout["target_cache"]
+        verify.draft_cache = self._rollback(
+            self.dcfg, verify.draft_cache, verify.draft_pendings,
+            vout["n_emitted"])
+        verify.t_next = vout["t_next"]
+        verify.drafts, verify.draft_pendings = None, None
+        out = RoundOutput(tokens=np.asarray(vout["tokens"]),
+                          n_emitted=np.asarray(vout["n_emitted"]),
+                          n_accept=np.asarray(vout["n_accept"]))
+        if record:
+            verify.emitted.append((out.tokens, out.n_emitted))
+        # batch D: stash fresh drafts
+        gen.drafts = dout["drafts"]
+        gen.draft_cache = dout["draft_cache"]
+        gen.draft_pendings = dout["pendings"]
+        return out
 
     def run(self, states: list, gen_len: int, max_rounds: int = 10_000):
-        """states: two BatchState entries (prefilled).  Mutates/returns
-        them with ``emitted`` filled until each batch has gen_len tokens."""
+        """Blocking driver: rotate until every sequence has ``gen_len``
+        tokens.  states: two BatchState entries (prefilled); mutated and
+        returned with ``emitted`` filled."""
         s0, s1 = states
-        # warm-up (t_0 of Fig. 4): draft generates for batch 0
-        d, _, dc, pend = self._draft_only(self.dp, self.dcfg, s0.draft_cache,
-                                          s0.t_next, self.n_cand)
-        s0.drafts, s0.draft_cache, s0.draft_pendings = d, dc, pend
-
-        import numpy as np
+        self.warmup(s0)
 
         def total(st):
             """Guaranteed tokens so far = sum of per-round minima."""
@@ -115,25 +198,7 @@ class InterleavedPipeline:
         while rounds < max_rounds:
             if total(s0) >= gen_len and total(s1) >= gen_len:
                 break
-            vstate = {"target_cache": verify.target_cache,
-                      "t_next": verify.t_next, "drafts": verify.drafts}
-            dstate = {"draft_cache": gen.draft_cache, "t_next": gen.t_next}
-            vout, dout = self._fused(self.tp, self.tcfg, self.dp, self.dcfg,
-                                     vstate, dstate, self.n_cand, self.mesh)
-            # batch V: commit + roll its draft cache back to acceptance
-            verify.target_cache = vout["target_cache"]
-            verify.draft_cache = self._rollback(
-                self.dcfg, verify.draft_cache, verify.draft_pendings,
-                vout["n_emitted"])
-            verify.t_next = vout["t_next"]
-            verify.drafts, verify.draft_pendings = None, None
-            verify.emitted.append((np.asarray(vout["tokens"]),
-                                   np.asarray(vout["n_emitted"])))
-            # batch D: stash fresh drafts
-            gen.drafts = dout["drafts"]
-            gen.draft_cache = dout["draft_cache"]
-            gen.draft_pendings = dout["pendings"]
-            # rotate roles (t_{n+1} of Fig. 4)
-            verify, gen = gen, verify
+            self.step(verify, gen)
+            verify, gen = gen, verify        # rotate roles (t_{n+1}, Fig. 4)
             rounds += 1
         return s0, s1, rounds

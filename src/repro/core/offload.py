@@ -35,8 +35,33 @@ except ImportError:  # pragma: no cover
     HAS_COMPUTE_ON = False
 
 
+def _memory_kinds(device) -> set:
+    try:
+        return {m.kind for m in device.addressable_memories()}
+    except Exception:  # pragma: no cover - very old jax
+        return set()
+
+
+def host_memory_kind(device=None) -> str:
+    """The memory kind the host offload tier actually maps to on this
+    backend: 'pinned_host' where exposed, else the device default (e.g.
+    CPU on older jax only has 'unpinned_host')."""
+    device = device or jax.devices()[0]
+    if "pinned_host" in _memory_kinds(device):
+        return "pinned_host"
+    try:
+        return device.default_memory().kind
+    except Exception:  # pragma: no cover - very old jax
+        return "device"
+
+
 def _sharding(memory_kind: str, device=None):
     device = device or jax.devices()[0]
+    if memory_kind not in _memory_kinds(device):
+        # this backend/jax doesn't expose the tier (e.g. CPU on older jax
+        # has only 'unpinned_host'): fall back to the default space — the
+        # copy schedule stays identical, only the annotation is dropped
+        return jax.sharding.SingleDeviceSharding(device)
     return jax.sharding.SingleDeviceSharding(device, memory_kind=memory_kind)
 
 

@@ -18,6 +18,14 @@ decode = streamed FFN slab + draft params + draft KV.
 
 The planner is pure Python/numpy (no jax) so it can run in the launcher
 before any device work, exactly as the paper's offline phase does.
+
+Beyond the paper, :class:`Workload` carries an *effective occupancy* term
+(fraction of in-flight batch slots holding live requests).  Prefill and
+host-attention KV traffic are modelled per live sequence while the
+streamed-FFN decode round is paid per slot, so the optimal policy shifts
+with occupancy — the continuous-batching scheduler re-runs :meth:`search`
+online when its measured occupancy drifts (see
+:meth:`repro.serving.engine.ServingEngine`).
 """
 from __future__ import annotations
 
@@ -45,6 +53,10 @@ class Workload:
     prompt_len: int          # S_avg of the dataset
     gen_len: int             # tokens to generate per sequence
     accept_prob: float = 0.7 # per-token draft acceptance probability p
+    occupancy: float = 1.0   # effective batch-slot occupancy in (0, 1]:
+                             # fraction of in-flight slots holding live
+                             # requests (continuous batching keeps this
+                             # near 1; padded-wave draining does not)
 
 
 # ---------------------------------------------------------------------------
@@ -111,6 +123,14 @@ class ParaSpecPlanner:
         cfg, dcfg, hw = self.target, self.draft, self.hw
         bs = pol.bs_decode * 2          # dual-batch rotation: total in flight
         m = pol.n_cand
+        # Effective occupancy: fraction of in-flight slots holding live
+        # requests.  Prefill and host-attention KV traffic are paid per
+        # *live* sequence; the streamed-FFN decode round is paid per
+        # *slot* (dead slots still ride the fused step).  This makes the
+        # best policy occupancy-dependent, so the serving engine re-runs
+        # the search online when measured occupancy drifts.
+        occ = min(max(wl.occupancy, 1e-6), 1.0)
+        n_live = bs * occ
 
         # ---- prefill (Eqs. 14-15): stream whole model once per microbatch
         stream_bytes = cfg.param_bytes(self.bp)
@@ -120,16 +140,16 @@ class ParaSpecPlanner:
         # KV cache written on accelerator then shipped to host (Table 3 P row)
         kv_ship = (wl.prompt_len * kv_bytes_per_token(cfg, self.bp)
                    / hw.d2h_bw)
-        t_prefill = math.ceil(bs / pol.bs_prefill) * t_prefill_step \
-            + bs * kv_ship
+        t_prefill = math.ceil(n_live / pol.bs_prefill) * t_prefill_step \
+            + n_live * kv_ship
 
         # ---- decode round (Eqs. 16-19)
         ctx = wl.prompt_len + wl.gen_len / 2
         # host attention (Eq. 19): CPU attention is DRAM-bandwidth bound —
         # each round streams the whole KV working set once (plus compute)
-        attn_flops = ((m + 1) * pol.bs_decode
+        attn_flops = ((m + 1) * pol.bs_decode * occ
                       * attn_flops_per_token(cfg, int(ctx)))
-        kv_read = pol.bs_decode * ctx * kv_bytes_per_token(cfg, self.bp)
+        kv_read = pol.bs_decode * occ * ctx * kv_bytes_per_token(cfg, self.bp)
         t_attn_host = max(attn_flops / hw.host_flops,
                           kv_read / (hw.host_mem_bw * hw.host_attn_eff))
         # per-layer FFN stream vs host attention overlap (Eq. 18)
@@ -163,7 +183,7 @@ class ParaSpecPlanner:
         # interleaved batches in alternating slots -> 2x n_iter slots
         t_decode = 2 * n_iter * t_round
 
-        n_generated = bs * wl.gen_len
+        n_generated = n_live * wl.gen_len
         thr = n_generated / (t_prefill + t_decode)
 
         # ---- memory (Eqs. 20-22)

@@ -13,17 +13,33 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh_compat(shape, axes):
+    """jax.make_mesh across jax versions: ``axis_types`` only exists on
+    newer releases (older ones are Auto-only anyway)."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def activate_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh:
+    ``jax.set_mesh`` on newer jax, the legacy ``with mesh:`` scope (which
+    sets the thread-resources physical mesh) on older releases."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh():
     """Single-device mesh with the production axis names (CPU tests)."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_compat((1, 1), ("data", "model"))
 
 
 def batch_axes(mesh) -> tuple:

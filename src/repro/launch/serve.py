@@ -1,19 +1,24 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Runs the SpecOffload serving engine end-to-end at a reduced scale on this
-host (CPU), or emits the production sharding plan for the selected arch on
-the v5e mesh (``--plan``).
+Runs the continuous-batching SpecOffload serving engine end-to-end at a
+reduced scale on this host (CPU), or emits the production sharding plan
+for the selected arch on the v5e mesh (``--plan``).
+
+Requests arrive on a Poisson trace (``--rate`` req/s, virtual clock);
+the report covers slot occupancy, TTFT / end-to-end latency percentiles,
+and sustained tokens/s.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import MISTRAL_7B
-from repro.serving.engine import ServeRequest, ServingEngine
+from repro.serving.engine import (SchedulerConfig, ServingEngine,
+                                  latency_percentiles)
+from repro.serving.trace import poisson_requests
 from repro.sim.hardware import ENVS
 
 
@@ -27,6 +32,11 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--n-cand", type=int, default=3)
+    ap.add_argument("--batch", type=int, default=2,
+                    help="slots per interleaved half-batch")
+    ap.add_argument("--rate", type=float, default=1.0,
+                    help="Poisson arrival rate (req/s, virtual clock)")
+    ap.add_argument("--admission", default="fifo", choices=("fifo", "sjf"))
     ap.add_argument("--plan", action="store_true",
                     help="print the ParaSpec plan + placement and exit")
     args = ap.parse_args()
@@ -54,21 +64,32 @@ def main():
 
     tcfg = tcfg.reduced(d_model=128)
     dcfg = MISTRAL_7B.reduced(d_model=64, vocab=tcfg.vocab_size)
-    eng = ServingEngine(tcfg, dcfg, hw, n_cand=args.n_cand, batch_size=2)
+    eng = ServingEngine(tcfg, dcfg, hw,
+                        config=SchedulerConfig(max_batch=args.batch,
+                                               n_cand=args.n_cand,
+                                               admission=args.admission))
     eng.init_from_seed(0)
 
     rng = np.random.default_rng(0)
-    for i in range(args.requests):
-        eng.submit(ServeRequest(
-            i, rng.integers(0, tcfg.vocab_size,
-                            args.prompt_len).astype(np.int32),
-            max_new_tokens=args.gen))
-    t0 = time.time()
+    prompts = [rng.integers(0, tcfg.vocab_size,
+                            args.prompt_len).astype(np.int32)
+               for _ in range(args.requests)]
+    gens = rng.integers(max(2, args.gen // 2), args.gen + 1, args.requests)
+    for r in poisson_requests(prompts, gens.tolist(), args.rate):
+        eng.submit(r)
+
     done = eng.run()
-    dt = time.time() - t0
+    st = eng.stats()
     toks = sum(len(r.result) for r in done)
-    print(f"served {len(done)} requests, {toks} tokens in {dt:.1f}s "
-          f"({toks/dt:.2f} tok/s on CPU, reduced config '{tcfg.name}')")
+    print(f"served {len(done)} requests, {toks} tokens in "
+          f"{st['wall_s']:.1f}s wall ({eng.throughput(done):.2f} tok/s on "
+          f"CPU, reduced config '{tcfg.name}')")
+    print(f"occupancy={st['mean_occupancy']:.2f} over {st['rounds']} "
+          f"rounds, fused compiles={st['fused_compiles']}")
+    for name, attr in (("ttft", "ttft_s"), ("e2e", "latency_s")):
+        pct = latency_percentiles(done, attr)
+        print(f"{name:>5}: " + "  ".join(f"{k}={v:.3f}s"
+                                         for k, v in pct.items()))
 
 
 if __name__ == "__main__":

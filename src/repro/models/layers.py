@@ -43,12 +43,29 @@ def seq_axis():
     return _SEQ_AXIS.get()
 
 
+def ambient_mesh():
+    """The mesh of the enclosing ``with mesh:`` scope, or None.
+
+    ``jax.sharding.get_abstract_mesh`` only exists on newer jax; on older
+    releases fall back to the thread-resources physical mesh that the
+    ``Mesh`` context manager installs."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        mesh = get()
+    else:
+        from jax._src.mesh import thread_resources
+        mesh = thread_resources.env.physical_mesh
+    if mesh is None or mesh.empty:
+        return None
+    return mesh
+
+
 def shard_hint(x, *spec):
     """with_sharding_constraint that no-ops when the named axes are absent
     from the ambient mesh (so the same model code runs on 1 CPU device and
     on the production mesh)."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
+    mesh = ambient_mesh()
+    if mesh is None:
         return x
     names = set(mesh.axis_names)
     for s in spec:
@@ -74,8 +91,8 @@ def seq_hint(x, ndim_before: int, ndim_after: int):
 def fsdp_axes():
     """The mesh axes weights' contraction dims shard over (podified on the
     multi-pod mesh) — None when no mesh is active."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
+    mesh = ambient_mesh()
+    if mesh is None:
         return None
     axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     if not axes:

@@ -1,1 +1,5 @@
-from repro.serving.engine import ServeRequest, ServingEngine
+from repro.serving.engine import (SchedulerConfig, ServeRequest,
+                                  ServingEngine, latency_percentiles)
+
+__all__ = ["SchedulerConfig", "ServeRequest", "ServingEngine",
+           "latency_percentiles"]

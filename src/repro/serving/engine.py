@@ -1,21 +1,55 @@
-"""Batched request serving on top of the SpecOffload engine.
+"""Continuous-batching request scheduler on top of the SpecOffload engine.
 
-The paper's workload is offline batch inference: a queue of prompts is
-drained in fixed-size batches (the planner's ``bs_decode x 2``), each batch
-generated with the dual-batch interleaved pipeline.  This engine adds the
-request-level plumbing: queueing, padding to common length (prompts are
-bucketed by length), EOS handling, and detokenized-result bookkeeping.
+The paper's workload is offline batch inference: fixed padded waves run to
+the longest ``max_new_tokens``.  This engine replaces that with a
+**continuous-batching scheduler** over the stepwise engine core
+(:meth:`SpecOffloadEngine.prefill_batch` / :meth:`decode_round`):
+
+* Each of the two interleaved half-batches is a fixed-shape
+  :class:`BatchState` of ``max_batch`` **slots**.  The fused
+  verify+draft jit step therefore compiles once and is reused for the
+  whole serving lifetime — sequences retire and join without any
+  shape-driven recompilation.
+* Per-slot sequence state (request, emitted tokens, EOS/length tracking)
+  lives host-side.  A sequence **retires** the moment it emits EOS or
+  reaches its own ``max_new_tokens``; nothing waits for the longest
+  request in a wave.
+* Freed slots are refilled **mid-flight** at round boundaries: a queued
+  request is prefilled on admission via the zig-zag path (§4.1.1) and
+  its target+draft KV is spliced into the freed cache slot.  Admission
+  happens only while the half's ``drafts`` are un-staged (right after it
+  was verified), so speculative state always covers the slot contents
+  and per-sequence outputs stay token-identical to a target-only greedy
+  decode (the losslessness invariant, tested in
+  ``tests/test_scheduler.py``).
+* Requests carry an ``arrival_s`` timestamp; the scheduler admits only
+  arrived requests and fast-forwards its virtual clock over idle gaps,
+  so Poisson traces replay deterministically.  Per-request metrics
+  (queue time, TTFT, decode latency, tokens/s) and engine metrics
+  (occupancy, rounds, throughput) are recorded on that clock.
+
+Round structure (one scheduler iteration)::
+
+      admit -> [fused verify(half V) + draft(half W)] -> retire -> swap
+                 ^ one jit program, fixed shapes          V's drafts are
+                                                          None: slot
+                                                          surgery is safe
+
+When a :class:`SchedulerConfig` enables it, the engine re-runs the
+ParaSpec policy search online with the *measured* occupancy (the
+planner's effective-occupancy term) and records the suggested policy.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
 
+import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.pipeline import SpecOffloadEngine
-from repro.data.pipeline import pad_batch
+from repro.core.pipeline import SpecOffloadEngine, required_cache_len
+from repro.core.planner import ParaSpecPlanner, Policy, Workload
 from repro.sim.hardware import ENV1, HardwareSpec
 
 
@@ -24,25 +58,117 @@ class ServeRequest:
     rid: int
     prompt: np.ndarray
     max_new_tokens: int = 32
+    arrival_s: float = 0.0        # relative to run() start (trace replay)
     result: np.ndarray | None = None
-    latency_s: float = 0.0
+    latency_s: float = 0.0        # end-to-end: arrival -> finished
+    # scheduler-stamped metrics (virtual clock, seconds from run() start)
+    admitted_s: float = float("nan")
+    first_token_s: float = float("nan")
+    finished_s: float = float("nan")
+
+    @property
+    def queue_s(self) -> float:
+        """Time spent queued before a slot freed up."""
+        return self.admitted_s - self.arrival_s
+
+    @property
+    def ttft_s(self) -> float:
+        """Time to first token (arrival -> prefill argmax available)."""
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def decode_s(self) -> float:
+        """First token -> last token."""
+        return self.finished_s - self.first_token_s
+
+    @property
+    def tok_per_s(self) -> float:
+        n = 0 if self.result is None else len(self.result)
+        return n / max(self.latency_s, 1e-9)
+
+
+@dataclass
+class SchedulerConfig:
+    """Continuous-batching knobs (see module docstring)."""
+    max_batch: int = 8            # slots per interleaved half (total 2x)
+    n_cand: int = 4               # draft candidates per round
+    eos_id: int = -1              # -1: never stop early
+    admission: str = "fifo"       # "fifo" | "sjf" (shortest job first)
+    length_bucket: int | None = None   # left-pad admitted prompts up to a
+                                  # multiple of this many tokens so prefill
+                                  # compiles per bucket, not per length.
+                                  # Pads are attended: outputs condition on
+                                  # the padded prompt (exactness per padded
+                                  # prompt, not per raw prompt) — leave
+                                  # None when bitwise losslessness vs. the
+                                  # raw prompt matters.
+    pad_id: int = 0
+    max_len: int | None = None    # per-slot KV capacity; derived from the
+                                  # queue at first run() when None
+    prefill_chunk: int = 8        # zig-zag microbatch size on admission
+    replan_threshold: float | None = None  # occupancy drift that triggers
+                                  # an online ParaSpec re-search (None: off)
+    replan_interval: int = 32     # rounds between drift checks
+
+
+@dataclass
+class _Slot:
+    """Host-side state of one cache slot in one interleaved half."""
+    req: ServeRequest | None = None
+    emitted: list = field(default_factory=list)
+    done: bool = True             # True: free (or holding a retired seq)
+
+
+def latency_percentiles(done: list, attr: str = "latency_s",
+                        ps=(50, 95, 99)) -> dict:
+    """p50/p95/p99 (seconds) of a per-request metric over completed reqs."""
+    vals = np.asarray([getattr(r, attr) for r in done], np.float64)
+    if vals.size == 0:
+        return {f"p{p}": float("nan") for p in ps}
+    return {f"p{p}": float(np.percentile(vals, p)) for p in ps}
 
 
 @dataclass
 class ServingEngine:
+    """Continuous-batching front door; see the module docstring.
+
+    ``n_cand``/``batch_size``/``eos_id`` are legacy shortcuts — they seed
+    a default :class:`SchedulerConfig` when ``config`` is not given.
+    """
     target_cfg: ModelConfig
     draft_cfg: ModelConfig
     hw: HardwareSpec = ENV1
     n_cand: int = 4
     batch_size: int = 8           # per interleaved half-batch x2 total
     eos_id: int = -1              # -1: never stop early
+    config: SchedulerConfig | None = None
     engine: SpecOffloadEngine = field(init=False)
     _queue: list = field(default_factory=list)
 
     def __post_init__(self):
         self.engine = SpecOffloadEngine(self.target_cfg, self.draft_cfg,
                                         self.hw)
+        if self.config is None:
+            self.config = SchedulerConfig(max_batch=self.batch_size,
+                                          n_cand=self.n_cand,
+                                          eos_id=self.eos_id)
+        self._splice = jax.jit(_splice_slot)
+        self._halves = None           # two BatchState of max_batch slots
+        self._slots = None            # parallel host-side _Slot maps
+        self._v = 0                   # index of the next verify half
+        self._max_len = self.config.max_len
+        self._now = 0.0               # virtual clock (s since run() start)
+        self._wall_s = 0.0            # accumulated real wall time in run()
+        self._rounds = 0
+        self._tokens_out = 0
+        self._occ_sum = 0.0
+        self._occ_window = []
+        self._planned_occ = 1.0
+        self._len_sum, self._gen_sum, self._req_seen = 0, 0, 0
+        self.replan_events = []
+        self.suggested_policy: Policy | None = None
 
+    # ------------------------------------------------------------------
     def load(self, target_params, draft_params):
         self.engine.load(target_params, draft_params)
 
@@ -50,41 +176,238 @@ class ServingEngine:
         self.engine.init_from_seed(seed)
 
     def submit(self, req: ServeRequest):
+        if self._max_len is not None:
+            need = self._required_len(req)
+            if need > self._max_len:
+                raise ValueError(
+                    f"request {req.rid} needs {need} KV slots > engine "
+                    f"capacity {self._max_len}; raise SchedulerConfig."
+                    f"max_len before the first run()")
         self._queue.append(req)
 
     def pending(self) -> int:
         return len(self._queue)
 
-    # ------------------------------------------------------------------
-    def run(self) -> list:
-        """Drain the queue; returns completed requests."""
-        done = []
-        while self._queue:
-            n = 2 * self.batch_size
-            batch = self._queue[:n]
-            self._queue = self._queue[n:]
-            # pad the wave to a full batch by repeating the last request
-            reqs = list(batch)
-            while len(reqs) < n:
-                reqs.append(ServeRequest(-1, reqs[-1].prompt, 1))
-            t0 = time.time()
-            prompts = pad_batch([r.prompt for r in reqs])
-            gen_len = max(r.max_new_tokens for r in reqs)
-            res = self.engine.generate(
-                np.asarray(prompts), gen_len=gen_len, n_cand=self.n_cand)
-            dt = time.time() - t0
-            for i, r in enumerate(batch):
-                toks = res.tokens[i, :r.max_new_tokens]
-                if self.eos_id >= 0:
-                    stop = np.where(toks == self.eos_id)[0]
-                    if stop.size:
-                        toks = toks[:stop[0] + 1]
-                r.result = toks
-                r.latency_s = dt
-                done.append(r)
-        return done
+    def _required_len(self, req: ServeRequest) -> int:
+        l = len(req.prompt)
+        if self.config.length_bucket:
+            b = self.config.length_bucket
+            l = -(-l // b) * b
+        return required_cache_len(l, req.max_new_tokens,
+                                  self.config.n_cand)
 
-    def throughput(self, done: list) -> float:
+    # ------------------------------------------------------------------
+    # slot bootstrap / admission
+
+    def _ensure_halves(self):
+        if self._halves is not None:
+            return
+        cfg = self.config
+        if self._max_len is None:
+            if not self._queue:
+                raise ValueError("run() with an empty queue and no "
+                                 "SchedulerConfig.max_len to size caches")
+            self._max_len = max(self._required_len(r) for r in self._queue)
+        # Park a 1-token dummy sequence in every slot: shapes are fixed
+        # forever, real requests are spliced in by _admit().
+        dummy = np.zeros((cfg.max_batch, 1), np.int32)
+        self._halves = [
+            self.engine.prefill_batch(dummy, self._max_len, cfg.max_batch)
+            for _ in range(2)]
+        self._slots = [[_Slot() for _ in range(cfg.max_batch)]
+                       for _ in range(2)]
+
+    def _admission_order(self, arrived: list) -> list:
+        if self.config.admission == "sjf":
+            return sorted(arrived,
+                          key=lambda r: (r.max_new_tokens, len(r.prompt)))
+        return arrived                # fifo: submission order
+
+    def _admit(self, h: int) -> list:
+        """Admit arrived requests into free slots of half ``h``.  Only
+        legal while the half's drafts are un-staged (drafts is None)."""
+        half, slots = self._halves[h], self._slots[h]
+        assert half.drafts is None, "admission while drafts staged"
+        cfg = self.config
+        finished = []
+        free = [i for i, s in enumerate(slots) if s.done]
+        if not free or not self._queue:
+            return finished
+        arrived = [r for r in self._queue if r.arrival_s <= self._now]
+        for slot_idx, req in zip(free, self._admission_order(arrived)):
+            self._queue.remove(req)
+            req.admitted_s = self._now
+            prompt = np.asarray(req.prompt, np.int32)
+            if cfg.length_bucket:
+                b = cfg.length_bucket
+                tgt = -(-len(prompt) // b) * b
+                prompt = np.concatenate(
+                    [np.full(tgt - len(prompt), cfg.pad_id, np.int32),
+                     prompt])
+            t_wall = time.time()
+            st = self.engine.prefill_batch(prompt[None, :], self._max_len,
+                                           cfg.prefill_chunk)
+            half.target_cache = self._splice(half.target_cache,
+                                             st.target_cache, slot_idx)
+            half.draft_cache = self._splice(half.draft_cache,
+                                            st.draft_cache, slot_idx)
+            t0 = int(np.asarray(st.t_next)[0])
+            half.t_next = half.t_next.at[slot_idx].set(t0)
+            self._now += time.time() - t_wall
+            req.first_token_s = self._now
+            slot = slots[slot_idx]
+            slot.req, slot.emitted, slot.done = req, [t0], False
+            self._len_sum += len(prompt)
+            self._gen_sum += req.max_new_tokens
+            self._req_seen += 1
+            # a 1-token request (or instant EOS) finishes at admission
+            if ((cfg.eos_id >= 0 and t0 == cfg.eos_id)
+                    or req.max_new_tokens <= 1):
+                self._finish(slot)
+                finished.append(req)
+        return finished
+
+    def _finish(self, slot: _Slot):
+        req = slot.req
+        req.result = np.asarray(slot.emitted, np.int32)
+        req.finished_s = self._now
+        req.latency_s = self._now - req.arrival_s
+        self._tokens_out += len(req.result)
+        slot.req, slot.emitted, slot.done = None, [], True
+
+    def _process_emissions(self, h: int, out) -> list:
+        """EOS-aware retirement: append this round's verified tokens to
+        each live slot, stopping per sequence at EOS or its own length."""
+        cfg = self.config
+        finished = []
+        for idx, slot in enumerate(self._slots[h]):
+            if slot.done:
+                continue
+            req = slot.req
+            for t in out.tokens[idx, :int(out.n_emitted[idx])]:
+                slot.emitted.append(int(t))
+                if ((cfg.eos_id >= 0 and int(t) == cfg.eos_id)
+                        or len(slot.emitted) >= req.max_new_tokens):
+                    self._finish(slot)
+                    finished.append(req)
+                    break
+        return finished
+
+    # ------------------------------------------------------------------
+    # occupancy + online replanning (planner effective-occupancy hook)
+
+    def _record_occupancy(self):
+        n_active = sum(1 for half in self._slots for s in half if not s.done)
+        occ = n_active / (2 * self.config.max_batch)
+        self._occ_sum += occ
+        self._occ_window.append(occ)
+
+    def _maybe_replan(self):
+        cfg = self.config
+        if (cfg.replan_threshold is None
+                or self._rounds % cfg.replan_interval
+                or not self._occ_window):
+            return
+        occ = float(np.mean(self._occ_window))
+        self._occ_window = []
+        if abs(occ - self._planned_occ) <= cfg.replan_threshold:
+            return
+        wl = Workload(prompt_len=max(1, self._len_sum
+                                     // max(1, self._req_seen)),
+                      gen_len=max(1, self._gen_sum
+                                  // max(1, self._req_seen)),
+                      occupancy=max(occ, 1e-3))
+        rep = ParaSpecPlanner(self.target_cfg, self.draft_cfg,
+                              self.hw).search(wl)
+        self.suggested_policy = rep.policy
+        self._planned_occ = occ
+        self.replan_events.append({"round": self._rounds, "occupancy": occ,
+                                   "policy": rep.policy,
+                                   "throughput": rep.throughput})
+
+    # ------------------------------------------------------------------
+    def run(self, max_rounds: int = 100_000) -> list:
+        """Serve until the queue and all in-flight sequences drain.
+
+        Returns the requests completed by this call (retirement order).
+        The two half-batches and their compiled programs persist across
+        calls — submit more requests and call run() again for free.
+        """
+        cfg = self.config
+        if self._halves is None and not self._queue:
+            return []                 # nothing submitted yet: no-op
+        self._ensure_halves()
+        t_run0 = time.time()
+        # Fresh virtual clock only when nothing survived the previous run
+        # (a max_rounds-exhausted run leaves sequences in flight whose
+        # stamps live on the old clock — keep it running for them).
+        if not any(not s.done for half in self._slots for s in half):
+            self._now = 0.0
+        completed = []
+        v = self._v
+        for _ in range(max_rounds):
+            # slot surgery is legal on any half without staged drafts
+            for h in (v, 1 - v):
+                if self._halves[h].drafts is None:
+                    completed += self._admit(h)
+            if not any(not s.done for half in self._slots for s in half):
+                if not self._queue:
+                    break
+                # idle: fast-forward the clock to the next arrival
+                self._now = max(self._now,
+                                min(r.arrival_s for r in self._queue))
+                continue
+            t_wall = time.time()
+            out = self.engine.decode_round(self._halves[v],
+                                           self._halves[1 - v],
+                                           cfg.n_cand, record=False)
+            self._now += time.time() - t_wall
+            self._rounds += 1
+            self._record_occupancy()
+            completed += self._process_emissions(v, out)
+            self._maybe_replan()
+            v = 1 - v
+        self._v = v
+        self._wall_s += time.time() - t_run0
+        return completed
+
+    # ------------------------------------------------------------------
+    def throughput(self, done: list | None = None) -> float:
+        """Tokens/s over the engine's accumulated real wall time (not the
+        max per-request latency, which overstates multi-wave runs).
+
+        With ``done=None`` this is the engine-lifetime figure (same as
+        ``stats()['tok_per_s']``); passing a subset of completed requests
+        attributes only that subset's tokens to the full wall time."""
+        if done is None:
+            return self._tokens_out / max(self._wall_s, 1e-9)
         toks = sum(len(r.result) for r in done)
-        t = max(r.latency_s for r in done)
-        return toks / max(t, 1e-9)
+        return toks / max(self._wall_s, 1e-9)
+
+    def stats(self) -> dict:
+        """Engine-level serving metrics."""
+        pipe = self.engine._pipe
+        return {
+            "rounds": self._rounds,
+            "tokens_out": self._tokens_out,
+            "wall_s": self._wall_s,
+            "mean_occupancy": self._occ_sum / max(1, self._rounds),
+            "tok_per_s": self._tokens_out / max(self._wall_s, 1e-9),
+            "fused_compiles": 0 if pipe is None
+            else pipe.trace_counts["fused"],
+            "replans": len(self.replan_events),
+        }
+
+
+def _splice_slot(big: dict, small: dict, slot) -> dict:
+    """Write sequence 0 of a (B=1) prefill cache into batch slot ``slot``
+    of a big cache.  Layer leaves are stacked (n_groups, B, ...); ``pos``
+    is (B,).  ``slot`` is a traced scalar, so one compile covers every
+    slot index (per cache tree structure)."""
+    layers = jax.tree.map(
+        lambda b, s: jax.lax.dynamic_update_index_in_dim(
+            b, s[:, 0].astype(b.dtype), slot, 1),
+        big["layers"], small["layers"])
+    pos = jax.lax.dynamic_update_index_in_dim(
+        big["pos"], small["pos"][0].astype(big["pos"].dtype), slot, 0)
+    return {"layers": layers, "pos": pos}
