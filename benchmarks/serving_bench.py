@@ -2,11 +2,13 @@
 the slot scheduler on the reduced CPU config.
 
 Reports slot occupancy, TTFT / end-to-end latency percentiles, sustained
-tokens/s, and the fused-step compile count (must stay 1 across all
-retirements/admissions).  Row format matches benchmarks/run.py:
-``(name, value, derived)``.
+tokens/s, peak resident target-KV bytes, and the fused-step compile count
+(must stay 1 across all retirements/admissions).  Row format matches
+benchmarks/run.py: ``(name, value, derived)``.
 
     PYTHONPATH=src python -m benchmarks.serving_bench [--requests N]
+    # paged-vs-contiguous A/B on the same trace -> BENCH_serving_paged.json
+    PYTHONPATH=src python -m benchmarks.serving_bench --compare [--out F]
 """
 from __future__ import annotations
 
@@ -14,7 +16,8 @@ import numpy as np
 
 
 def run(rows: list, requests: int = 10, gen: int = 8, rate: float = 2.0,
-        seed: int = 0) -> dict:
+        seed: int = 0, paged: bool = True, kv_quant_cold: bool = False,
+        prefix: str = "serving") -> dict:
     from repro.configs.base import MIXTRAL_8X7B, MISTRAL_7B
     from repro.serving.engine import (SchedulerConfig, ServingEngine,
                                       latency_percentiles)
@@ -27,13 +30,19 @@ def run(rows: list, requests: int = 10, gen: int = 8, rate: float = 2.0,
     # benchmark doesn't assert raw-prompt losslessness)
     eng = ServingEngine(tcfg, dcfg,
                         config=SchedulerConfig(max_batch=2, n_cand=2,
-                                               length_bucket=16))
+                                               length_bucket=16,
+                                               paged=paged,
+                                               kv_quant_cold=kv_quant_cold))
     eng.init_from_seed(seed)
 
     rng = np.random.default_rng(seed)
-    prompts = [rng.integers(0, tcfg.vocab_size,
-                            int(rng.integers(8, 17))).astype(np.int32)
-               for _ in range(requests)]
+    # heavy-tailed prompt mix: mostly short chats plus occasional long
+    # documents.  The contiguous layout must size every slot for the
+    # tail; the paged pool only holds blocks each sequence actually uses.
+    lens = [int(rng.integers(48, 81)) if rng.random() < 0.25
+            else int(rng.integers(8, 17)) for _ in range(requests)]
+    prompts = [rng.integers(0, tcfg.vocab_size, L).astype(np.int32)
+               for L in lens]
     gens = rng.integers(max(2, gen // 2), gen + 1, requests)
     for r in poisson_requests(prompts, gens.tolist(), rate, seed):
         eng.submit(r)
@@ -42,24 +51,95 @@ def run(rows: list, requests: int = 10, gen: int = 8, rate: float = 2.0,
     st = eng.stats()
     ttft = latency_percentiles(done, "ttft_s")
     e2e = latency_percentiles(done, "latency_s")
-    rows.append(("serving/occupancy", st["mean_occupancy"], "measured"))
-    rows.append(("serving/tok_per_s", eng.throughput(done), "measured"))
-    rows.append(("serving/ttft_p50_s", ttft["p50"], "measured"))
-    rows.append(("serving/ttft_p95_s", ttft["p95"], "measured"))
-    rows.append(("serving/e2e_p50_s", e2e["p50"], "measured"))
-    rows.append(("serving/e2e_p95_s", e2e["p95"], "measured"))
-    rows.append(("serving/fused_compiles", float(st["fused_compiles"]),
+    kv = st["kv"]
+    rows.append((f"{prefix}/occupancy", st["mean_occupancy"], "measured"))
+    rows.append((f"{prefix}/tok_per_s", eng.throughput(done), "measured"))
+    rows.append((f"{prefix}/ttft_p50_s", ttft["p50"], "measured"))
+    rows.append((f"{prefix}/ttft_p95_s", ttft["p95"], "measured"))
+    rows.append((f"{prefix}/e2e_p50_s", e2e["p50"], "measured"))
+    rows.append((f"{prefix}/e2e_p95_s", e2e["p95"], "measured"))
+    rows.append((f"{prefix}/peak_kv_bytes", float(kv["peak_kv_bytes"]),
+                 "measured"))
+    rows.append((f"{prefix}/fused_compiles", float(st["fused_compiles"]),
                  "measured"))
     return {"done": done, "stats": st, "ttft": ttft, "e2e": e2e}
 
 
+def _summary(out: dict) -> dict:
+    """JSON-friendly digest of one run() result."""
+    st = out["stats"]
+    kv = {k: v for k, v in st["kv"].items() if k != "allocators"}
+    return {
+        "requests": len(out["done"]),
+        "rounds": st["rounds"],
+        "occupancy": st["mean_occupancy"],
+        "tok_per_s": st["tok_per_s"],
+        "ttft_s": out["ttft"],
+        "e2e_s": out["e2e"],
+        "decode_s": {  # first token -> last token
+            k: float(v) for k, v in zip(
+                ("p50", "p95", "p99"),
+                np.percentile([r.decode_s for r in out["done"]],
+                              (50, 95, 99)))},
+        "fused_compiles": st["fused_compiles"],
+        "kv": kv,
+        "peak_kv_bytes": float(kv["peak_kv_bytes"]),
+    }
+
+
+def compare(requests: int = 10, gen: int = 8, rate: float = 2.0,
+            seed: int = 0) -> dict:
+    """Contiguous vs paged vs paged+int8 on the *same* Poisson trace."""
+    variants = {
+        "contiguous": dict(paged=False),
+        "paged": dict(paged=True),
+        "paged_int8_cold": dict(paged=True, kv_quant_cold=True),
+    }
+    report: dict = {"trace": {"requests": requests, "gen": gen,
+                              "rate_rps": rate, "seed": seed,
+                              "config": "MIXTRAL_8X7B.reduced(d_model=64)"
+                                        " / max_batch=2 x2, n_cand=2"}}
+    for name, kw in variants.items():
+        rows: list = []
+        out = run(rows, requests, gen, rate, seed, prefix=name, **kw)
+        report[name] = _summary(out)
+    base, pag = report["contiguous"], report["paged"]
+    report["verdict"] = {
+        "peak_kv_reduction": 1.0 - pag["peak_kv_bytes"]
+        / base["peak_kv_bytes"],
+        "tok_per_s_ratio": pag["tok_per_s"] / base["tok_per_s"],
+        "int8_peak_kv_reduction": 1.0
+        - report["paged_int8_cold"]["peak_kv_bytes"]
+        / base["peak_kv_bytes"],
+    }
+    return report
+
+
 def main():
     import argparse
+    import json
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--rate", type=float, default=2.0)
+    ap.add_argument("--compare", action="store_true",
+                    help="contiguous vs paged A/B on one fixed trace")
+    ap.add_argument("--out", default="BENCH_serving_paged.json",
+                    help="JSON report path for --compare")
     args = ap.parse_args()
+    if args.compare:
+        report = compare(args.requests, args.gen, args.rate)
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2)
+        v = report["verdict"]
+        print(f"wrote {args.out}")
+        print(f"peak KV reduction (paged):      "
+              f"{100 * v['peak_kv_reduction']:.1f}%")
+        print(f"peak KV reduction (paged+int8): "
+              f"{100 * v['int8_peak_kv_reduction']:.1f}%")
+        print(f"tokens/s ratio (paged/contig):  "
+              f"{v['tok_per_s_ratio']:.2f}x")
+        return
     rows: list = []
     out = run(rows, args.requests, args.gen, args.rate)
     print("name,value,derived")

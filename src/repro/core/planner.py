@@ -57,6 +57,12 @@ class Workload:
                              # fraction of in-flight slots holding live
                              # requests (continuous batching keeps this
                              # near 1; padded-wave draining does not)
+    kv_bytes_per_seq: float | None = None
+                             # measured resident target-KV bytes per live
+                             # sequence (the serving engine feeds its
+                             # paged-allocator average here); None falls
+                             # back to the analytic ctx * bytes/token
+                             # model, which over-states int8/paged caches
 
 
 # ---------------------------------------------------------------------------
@@ -77,6 +83,28 @@ def layer_attn_bytes(cfg: ModelConfig, bytes_per: int = 2) -> float:
 
 def kv_bytes_per_token(cfg: ModelConfig, bytes_per: int = 2) -> float:
     return 2 * cfg.n_layers * cfg.n_kv_heads * cfg.head_dim * bytes_per
+
+
+def stored_kv_bytes_per_seq(cfg: ModelConfig, context: int, *,
+                            block_size: int | None = None,
+                            quant: bool = False,
+                            bytes_per: int = 2) -> float:
+    """Resident full-attention KV bytes one sequence holds at ``context``
+    tokens in the *serving* cache, as actually stored:
+
+    * ``quant`` — int8 values (1 byte/elem) plus a 4-byte f32 absmax
+      scale per (token, kv-head) for each of K and V;
+    * ``block_size`` — paged storage rounds the context up to the block
+      grid (internal fragmentation of the last block).
+    """
+    tokens = context if block_size is None \
+        else -(-context // block_size) * block_size
+    elems = 2 * cfg.n_layers * cfg.n_kv_heads * cfg.head_dim
+    if quant:
+        per_tok = elems + 2 * cfg.n_layers * cfg.n_kv_heads * 4
+    else:
+        per_tok = elems * bytes_per
+    return float(tokens * per_tok)
 
 
 def attn_flops_per_token(cfg: ModelConfig, context: int) -> float:
@@ -149,7 +177,13 @@ class ParaSpecPlanner:
         # each round streams the whole KV working set once (plus compute)
         attn_flops = ((m + 1) * pol.bs_decode * occ
                       * attn_flops_per_token(cfg, int(ctx)))
-        kv_read = pol.bs_decode * occ * ctx * kv_bytes_per_token(cfg, self.bp)
+        # KV traffic per live sequence: prefer the *measured* resident
+        # bytes (the serving engine's paged allocator reports its block-
+        # granular average, which reflects int8 storage and block
+        # fragmentation) over the analytic bf16-contiguous model
+        kv_seq = (wl.kv_bytes_per_seq if wl.kv_bytes_per_seq
+                  else ctx * kv_bytes_per_token(cfg, self.bp))
+        kv_read = pol.bs_decode * occ * kv_seq
         t_attn_host = max(attn_flops / hw.host_flops,
                           kv_read / (hw.host_mem_bw * hw.host_attn_eff))
         # per-layer FFN stream vs host attention overlap (Eq. 18)

@@ -6,6 +6,14 @@ Tiling: grid = (batch*kv_heads, Skv/block_k); each program holds the full
 (g*m, d) query tile for its KV head group in VMEM (g*m is tiny) and streams
 (block_k, d) KV tiles from HBM, accumulating online-softmax state in VMEM
 scratch.  This is the per-step hot spot of the decode phase (§4.1.2).
+
+:func:`paged_decode_attention` is the block-table variant for the paged KV
+substrate: KV lives in a shared block pool ``(num_blocks, block_size, ...)``
+and each grid program looks up the physical block for its (sequence,
+logical-block) coordinate through a scalar-prefetched block table, so the
+DMA itself performs the gather (no per-step contiguous copy of the cache).
+Cold blocks may be stored int8 with per-row-per-head scales; dequantization
+happens on the VMEM tile after the gather.
 """
 from __future__ import annotations
 
@@ -116,4 +124,137 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         ],
         interpret=interpret,
     )(qf, kf, vf, lens)
+    return out.reshape(b, hkv, g, m, d).reshape(b, hq, m, d)
+
+
+# ---------------------------------------------------------------------------
+# paged (block-table) variant
+
+
+def _paged_kernel(bt_ref, lens_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                  o_ref, m_scr, l_scr, acc_scr, *, scale: float,
+                  block_size: int, n_log_blocks: int, m_tokens: int,
+                  quant: bool):
+    """One (sequence, kv-head, logical-block) program.
+
+    The physical block was already selected by the scalar-prefetch index
+    maps, so ``k_ref``/``v_ref`` hold the gathered (block_size, d) tile.
+    """
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # (gm, d)
+    k = k_ref[0, 0].astype(jnp.float32)               # (bs, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    if quant:
+        k = k * ks_ref[0, 0].astype(jnp.float32)      # (bs, 1) row scales
+        v = v * vs_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    length = lens_ref[pl.program_id(0)]               # valid tokens (= pos+m)
+    k_pos = j * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    q_tok = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) % m_tokens
+    q_pos = length - m_tokens + q_tok
+    ok = (k_pos <= q_pos) & (k_pos < length)
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev, l_prev = m_scr[...], l_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_scr[...] = l_prev * corr + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == n_log_blocks - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_tables: jax.Array,
+                           lengths: jax.Array, *,
+                           k_scale: jax.Array | None = None,
+                           v_scale: jax.Array | None = None,
+                           scale: float | None = None,
+                           interpret: bool = False) -> jax.Array:
+    """Verify-attention against a paged (block-pool) cache.
+
+    q (B, Hq, m, d) — the m new tokens, already written into the pool at
+    logical positions [len-m, len); k_pool/v_pool (NB, BS, Hkv, d) shared
+    block pool (int8 when ``k_scale``/``v_scale`` (NB, BS, Hkv, 1) are
+    given); block_tables (B, MBS) int32 physical block per logical block
+    (entries past the sequence's allocation may be 0/-1 — they are never
+    attended because positions >= ``lengths`` are masked); lengths (B,)
+    valid tokens per sequence (= pos + m).  Full causal attention (no
+    sliding-window support — ring layers stay unpaged by design).
+    Returns (B, Hq, m, d).
+    """
+    b, hq, m, d = q.shape
+    nb, bs, hkv, _ = k_pool.shape
+    mbs = block_tables.shape[1]
+    g = hq // hkv
+    scale = d ** -0.5 if scale is None else scale
+    quant = k_scale is not None
+
+    # one q tile per (sequence, kv head) — rows (g, m)-flattened as in the
+    # contiguous kernel; pools head-major so tiles are (block, head, bs, d)
+    qf = q.reshape(b, hkv, g, m, d).reshape(b, hkv, g * m, d)
+    kp = k_pool.transpose(0, 2, 1, 3)                 # (NB, Hkv, BS, d)
+    vp = v_pool.transpose(0, 2, 1, 3)
+    bt = jnp.maximum(block_tables.astype(jnp.int32), 0)
+    lens = lengths.astype(jnp.int32)
+    if quant:
+        ksp = k_scale.transpose(0, 2, 1, 3)           # (NB, Hkv, BS, 1)
+        vsp = v_scale.transpose(0, 2, 1, 3)
+    else:  # dummy (1,..) operands keep one kernel signature
+        ksp = jnp.zeros((1, hkv, bs, 1), jnp.float32)
+        vsp = jnp.zeros((1, hkv, bs, 1), jnp.float32)
+
+    def q_map(bi, h, j, bt_ref, lens_ref):
+        return (bi, h, 0, 0)
+
+    def kv_map(bi, h, j, bt_ref, lens_ref):
+        return (bt_ref[bi, j], h, 0, 0)
+
+    def sc_map(bi, h, j, bt_ref, lens_ref):
+        if quant:
+            return (bt_ref[bi, j], h, 0, 0)
+        return (0, h, 0, 0)
+
+    kernel = functools.partial(
+        _paged_kernel, scale=scale, block_size=bs, n_log_blocks=mbs,
+        m_tokens=m, quant=quant)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, mbs),
+        in_specs=[
+            pl.BlockSpec((1, 1, g * m, d), q_map),
+            pl.BlockSpec((1, 1, bs, d), kv_map),
+            pl.BlockSpec((1, 1, bs, d), kv_map),
+            pl.BlockSpec((1, 1, bs, 1), sc_map),
+            pl.BlockSpec((1, 1, bs, 1), sc_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g * m, d), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((g * m, 1), jnp.float32),
+            pltpu.VMEM((g * m, 1), jnp.float32),
+            pltpu.VMEM((g * m, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g * m, d), q.dtype),
+        interpret=interpret,
+    )(bt, lens, qf, kp, vp, ksp, vsp)
     return out.reshape(b, hkv, g, m, d).reshape(b, hq, m, d)

@@ -35,6 +35,16 @@ def decode_attention(q, k, v, lengths, *, scale=None, window=None,
                                 block_k=block_k, interpret=interpret)
 
 
+@partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
+                           k_scale=None, v_scale=None, scale=None,
+                           interpret=None):
+    interpret = INTERPRET if interpret is None else interpret
+    return _da.paged_decode_attention(
+        q, k_pool, v_pool, block_tables, lengths, k_scale=k_scale,
+        v_scale=v_scale, scale=scale, interpret=interpret)
+
+
 @partial(jax.jit, static_argnames=("activation", "block_c", "block_f",
                                    "interpret"))
 def moe_ffn(buf, w_gate, w_up, w_down, *, activation="swiglu", block_c=128,

@@ -54,6 +54,42 @@ def decode_attention_ref(q, k, v, lengths, *, scale=None, window=None):
     return o.reshape(b, hq, m, d).astype(q.dtype)
 
 
+def gather_paged_kv_ref(k_pool, v_pool, block_tables, *, k_scale=None,
+                        v_scale=None, dtype=jnp.float32):
+    """Materialize per-sequence contiguous KV from a block pool.
+
+    k_pool/v_pool (NB, BS, H, d) [int8 when scales (NB, BS, H, 1) given];
+    block_tables (B, MBS) -> k/v (B, MBS*BS, H, d) in ``dtype``.  This is
+    the CPU-CI fallback for the paged Pallas kernel *and* the model's
+    reference decode path: positions past each sequence's length hold
+    garbage and must be masked by the caller.
+    """
+    nb, bs, h, d = k_pool.shape
+    bt = jnp.maximum(block_tables.astype(jnp.int32), 0)
+    b, mbs = bt.shape
+    idx = (bt[:, :, None] * bs
+           + jnp.arange(bs, dtype=jnp.int32)[None, None, :]).reshape(b, -1)
+    k = k_pool.reshape(nb * bs, h, d)[idx]
+    v = v_pool.reshape(nb * bs, h, d)[idx]
+    if k_scale is not None:
+        ks = k_scale.reshape(nb * bs, h, 1)[idx]
+        vs = v_scale.reshape(nb * bs, h, 1)[idx]
+        k = k.astype(jnp.float32) * ks
+        v = v.astype(jnp.float32) * vs
+    return k.astype(dtype), v.astype(dtype)
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
+                               k_scale=None, v_scale=None, scale=None):
+    """Oracle for the paged kernel: gather, then contiguous decode ref."""
+    k, v = gather_paged_kv_ref(k_pool, v_pool, block_tables,
+                               k_scale=k_scale, v_scale=v_scale,
+                               dtype=jnp.float32)
+    return decode_attention_ref(q, jnp.swapaxes(k, 1, 2),
+                                jnp.swapaxes(v, 1, 2), lengths,
+                                scale=scale).astype(q.dtype)
+
+
 def moe_ffn_ref(buf, w_gate, w_up, w_down, *, activation="swiglu"):
     act = jax.nn.silu if activation == "swiglu" else jax.nn.gelu
     buff = buf.astype(jnp.float32)

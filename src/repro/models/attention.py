@@ -31,6 +31,13 @@ from repro.models.layers import (apply_rope, dense_init, rope_table,
 NEG_INF = -1e30
 
 
+def _use_paged_kernel() -> bool:
+    """Route paged decode through the Pallas block-table kernel on TPU;
+    the CPU CI path uses the gather + masked-softmax reference instead
+    (interpret-mode Pallas would dominate test wall time)."""
+    return jax.default_backend() == "tpu"
+
+
 # ---------------------------------------------------------------------------
 # params
 
@@ -287,6 +294,99 @@ def dequantize(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
     return (q.astype(jnp.float32) * scale).astype(dtype)
 
 
+# ---------------------------------------------------------------------------
+# paged KV pool (block-table indexed; shared across the batch)
+
+
+def init_paged_kv_pool(num_blocks: int, block_size: int, n_kv_heads: int,
+                       head_dim: int, dtype, quant: bool = False) -> dict:
+    """Block pool for full-attention layers: ``(NB, BS, Hkv, d)`` values
+    shared by every sequence; per-sequence block tables map logical block
+    -> physical block.  ``quant=True`` stores int8 values + f32 per-row
+    per-head scales (cold blocks are immutable once full, so the whole
+    pool can hold the quantized form — the numerics of the contiguous
+    int8 cache, promoted to the paged layout)."""
+    if quant:
+        return {
+            "k": jnp.zeros((num_blocks, block_size, n_kv_heads, head_dim),
+                           jnp.int8),
+            "v": jnp.zeros((num_blocks, block_size, n_kv_heads, head_dim),
+                           jnp.int8),
+            "k_scale": jnp.zeros((num_blocks, block_size, n_kv_heads, 1),
+                                 jnp.float32),
+            "v_scale": jnp.zeros((num_blocks, block_size, n_kv_heads, 1),
+                                 jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((num_blocks, block_size, n_kv_heads, head_dim),
+                       dtype),
+        "v": jnp.zeros((num_blocks, block_size, n_kv_heads, head_dim),
+                       dtype),
+    }
+
+
+def paged_row_indices(block_tables: jax.Array, positions: jax.Array,
+                      block_size: int) -> jax.Array:
+    """Flat pool-row index for each logical ``positions`` (B, N) entry.
+
+    Out-of-table positions are clamped to the last table entry and null
+    (<= 0) table entries resolve to block 0 — the engine reserves block 0
+    as a scratch block that is never granted, so clamped/dead writes land
+    there harmlessly.
+    """
+    bt = block_tables.astype(jnp.int32)
+    mbs = bt.shape[1]
+    blk = jnp.clip(positions // block_size, 0, mbs - 1)
+    bids = jnp.maximum(jnp.take_along_axis(bt, blk, axis=1), 0)
+    return bids * block_size + positions % block_size
+
+
+def paged_write(cache: dict, k_new: jax.Array, v_new: jax.Array,
+                block_tables: jax.Array, pos) -> dict:
+    """Scatter Sq new K/V rows per sequence into the shared block pool at
+    logical positions [pos, pos+Sq) via the block table.  Quantizes rows
+    on write when the pool is int8 (identical per-row numerics to the
+    contiguous int8 cache, so decoding stays token-identical to it)."""
+    bs = cache["k"].shape[1]
+    b, sq = k_new.shape[:2]
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    positions = pos_arr[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]
+    idx = paged_row_indices(block_tables, positions, bs).reshape(-1)
+    if "k_scale" in cache:
+        kq, ks = quantize_rows(k_new)
+        vq, vs = quantize_rows(v_new)
+        return {"k": _pool_scatter(cache["k"], idx, kq),
+                "v": _pool_scatter(cache["v"], idx, vq),
+                "k_scale": _pool_scatter(cache["k_scale"], idx, ks),
+                "v_scale": _pool_scatter(cache["v_scale"], idx, vs)}
+    return {"k": _pool_scatter(cache["k"], idx, k_new),
+            "v": _pool_scatter(cache["v"], idx, v_new),
+            **{kk: cache[kk] for kk in cache if kk not in ("k", "v")}}
+
+
+def _pool_scatter(pool: jax.Array, flat_idx: jax.Array,
+                  rows: jax.Array) -> jax.Array:
+    """Write rows (..., H, d) at flat row indices of a (NB, BS, H, d) pool.
+    Duplicate indices only arise from dead slots aimed at the scratch
+    block, where any write order is acceptable."""
+    nb, bs = pool.shape[:2]
+    flat = pool.reshape((nb * bs,) + pool.shape[2:])
+    flat = flat.at[flat_idx].set(
+        rows.reshape((-1,) + pool.shape[2:]).astype(pool.dtype))
+    return flat.reshape(pool.shape)
+
+
+def paged_gather(cache: dict, block_tables: jax.Array, dtype):
+    """Per-sequence contiguous (B, MBS*BS, H, d) K/V view of the pool
+    (dequantized when int8).  Reference/CPU read path — on TPU the paged
+    flash-decode kernel gathers block tiles in-kernel instead."""
+    from repro.kernels.ref import gather_paged_kv_ref
+    return gather_paged_kv_ref(
+        cache["k"], cache["v"], block_tables,
+        k_scale=cache.get("k_scale"), v_scale=cache.get("v_scale"),
+        dtype=dtype)
+
+
 def _slots_for(pos: jax.Array, i: int, n_slots: int, ring: bool) -> jax.Array:
     slot = jnp.asarray(pos, jnp.int32) + i
     return jnp.mod(slot, n_slots) if ring else slot
@@ -406,12 +506,15 @@ def apply_attention(params: dict, x: jax.Array, *,
                     window: int | None = None,
                     cache: dict | None = None, pos=0,
                     phase: str = "prefill",
+                    block_tables: jax.Array | None = None,
                     kv_chunk: int = 0) -> tuple:
     """One attention layer.
 
     phase="prefill"/"train": x is the full sequence; if ``cache`` is given it
     is (re)filled and returned.  phase="decode": x holds Sq (>=1) new tokens
     at logical positions [pos, pos+Sq); the cache is updated and attended.
+    When ``block_tables`` is given (decode only), ``cache`` is a shared
+    block *pool* and reads/writes are block-table indirect (paged KV).
 
     Returns (out, new_cache).
     """
@@ -473,6 +576,25 @@ def apply_attention(params: dict, x: jax.Array, *,
                     cache["k"], kw.astype(cache["k"].dtype), zero)
                 new_cache["v"] = jax.lax.dynamic_update_slice(
                     cache["v"], vw.astype(cache["v"].dtype), zero)
+    elif phase == "decode" and block_tables is not None:
+        # paged pool: scatter the new rows through the block table, then
+        # attend over the table's gathered view.  Full attention only —
+        # ring (SWA) layers are window-bounded and stay per-slot.
+        assert cache is not None and window is None
+        new_cache = paged_write(cache, k, v, block_tables, pos_arr)
+        if _use_paged_kernel():
+            from repro.kernels import ops as kernel_ops
+            out = kernel_ops.paged_decode_attention(
+                q.transpose(0, 2, 1, 3), new_cache["k"], new_cache["v"],
+                block_tables, pos_arr + sq,
+                k_scale=new_cache.get("k_scale"),
+                v_scale=new_cache.get("v_scale"), scale=scale)
+            out = out.transpose(0, 2, 1, 3).reshape(b, sq, -1)
+        else:
+            k_read, v_read = paged_gather(new_cache, block_tables, q.dtype)
+            kv_positions = jnp.arange(k_read.shape[1], dtype=jnp.int32)
+            mask = attention_mask(q_positions, kv_positions, None)
+            out = attention_direct(q, k_read, v_read, mask, scale)
     elif phase == "decode":
         assert cache is not None
         n_slots = cache["k"].shape[1]

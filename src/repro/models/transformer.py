@@ -28,7 +28,9 @@ from repro.models import moe as moe_lib
 from repro.models import rglru as rglru_lib
 from repro.models import rwkv as rwkv_lib
 from repro.models.attention import (apply_attention, init_attention,
-                                    init_kv_cache, restore_rejected_rows)
+                                    init_kv_cache, init_paged_kv_pool,
+                                    paged_row_indices, quantize_rows,
+                                    restore_rejected_rows)
 from repro.models.layers import (apply_mlp, apply_norm, embed_tokens,
                                  embedding_specs, init_embedding, init_mlp,
                                  init_norm, mlp_specs, norm_specs, unembed)
@@ -119,7 +121,8 @@ def layer_specs(cfg: ModelConfig, kind: str, model_size: int,
 
 def apply_layer(params: dict, cfg: ModelConfig, kind: str, x: jax.Array,
                 cache: dict | None, pos, phase: str, mesh=None,
-                enc_out: jax.Array | None = None, use_moe: bool = False):
+                enc_out: jax.Array | None = None, use_moe: bool = False,
+                block_tables: jax.Array | None = None):
     """Returns (x, new_cache, pending)."""
     nf = _norm_fn(cfg)
     pending = {}
@@ -149,7 +152,8 @@ def apply_layer(params: dict, cfg: ModelConfig, kind: str, x: jax.Array,
             n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
             head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
             use_rope=cfg.use_rope, window=window,
-            cache=self_cache, pos=pos, phase=phase)
+            cache=self_cache, pos=pos, phase=phase,
+            block_tables=block_tables if kind == ATTN else None)
         x = x + out
         if phase == "decode":
             # Weight-stationary decode (§Perf hillclimb #2): the token
@@ -255,6 +259,136 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
             "pos": jnp.zeros((batch,), jnp.int32)}
 
 
+# ---------------------------------------------------------------------------
+# paged serving cache (block-table KV for full-attention layers)
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, num_blocks: int,
+                     block_size: int, max_blocks_per_seq: int,
+                     kv_quant: bool | None = None) -> dict:
+    """Serving cache with *paged* full-attention KV.
+
+    ATTN layers share one ``(num_blocks, block_size, ...)`` pool per layer
+    group; each sequence addresses it through its ``block_tables`` row
+    (``max_blocks_per_seq`` entries, 0 = the reserved scratch block).
+    Sliding-window / recurrent layers keep their per-slot state — rings
+    are window-bounded, so paging them buys nothing.  ``kv_quant``
+    overrides ``cfg.kv_cache_dtype`` for the pool (int8 cold blocks on an
+    otherwise-fp model config).
+    """
+    if cfg.encoder_decoder:
+        raise ValueError("paged KV serving supports decoder-only models")
+    quant = (cfg.kv_cache_dtype == "int8") if kv_quant is None else kv_quant
+    dt = _dtype(cfg)
+    layers = []
+    for kind in cfg.layer_pattern:
+        if kind == ATTN:
+            one = init_paged_kv_pool(num_blocks, block_size, cfg.n_kv_heads,
+                                     cfg.head_dim, dt, quant=quant)
+        else:
+            one = init_layer_cache(cfg, kind, batch,
+                                   max_blocks_per_seq * block_size)
+        layers.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_groups,) + a.shape), one))
+    return {"layers": tuple(layers),
+            "pos": jnp.zeros((batch,), jnp.int32),
+            "block_tables": jnp.zeros((batch, max_blocks_per_seq),
+                                      jnp.int32)}
+
+
+def admit_sequence_paged(cfg: ModelConfig, cache: dict, prefill: dict,
+                         slot, table_row, length, n_shared) -> dict:
+    """Graft a (B=1) contiguous prefill cache into batch slot ``slot`` of a
+    paged serving cache.
+
+    ATTN layers scatter prefill rows [``n_shared * block_size``, ``length``)
+    into the blocks named by ``table_row`` (rows covered by prefix-shared
+    blocks are skipped — their content is already in the pool); other layer
+    kinds splice per-slot state exactly like the contiguous path.  Rows are
+    quantized on insert when the pool is int8 and the prefill cache is not.
+    ``slot``/``table_row``/``length``/``n_shared`` may be traced, so one
+    compile covers every admission.
+    """
+    bt = cache["block_tables"]
+    mbs = bt.shape[1]
+    row = jnp.asarray(table_row, jnp.int32)
+    length = jnp.asarray(length, jnp.int32)
+    start = jnp.asarray(n_shared, jnp.int32) * _paged_block_size(cache, cfg)
+    new_layers = []
+    for i, kind in enumerate(cfg.layer_pattern):
+        big, small = cache["layers"][i], prefill["layers"][i]
+        if kind == ATTN:
+            new_layers.append(_paged_insert_layer(big, small, row, start,
+                                                  length))
+        else:
+            new_layers.append(jax.tree.map(
+                lambda b_, s_: jax.lax.dynamic_update_index_in_dim(
+                    b_, s_[:, 0].astype(b_.dtype), slot, 1), big, small))
+    pos = jax.lax.dynamic_update_index_in_dim(
+        cache["pos"], length.astype(cache["pos"].dtype), slot, 0)
+    bt = jax.lax.dynamic_update_index_in_dim(bt, row, slot, 0)
+    return {"layers": tuple(new_layers), "pos": pos, "block_tables": bt}
+
+
+def _paged_block_size(cache: dict, cfg: ModelConfig) -> int:
+    for i, kind in enumerate(cfg.layer_pattern):
+        if kind == ATTN:
+            return cache["layers"][i]["k"].shape[2]
+    raise ValueError("paged cache has no full-attention layer")
+
+
+def _paged_insert_layer(pool: dict, prefill: dict, table_row, start,
+                        length) -> dict:
+    """Scatter one layer group's prefill rows into its block pool.
+
+    ``pool`` leaves are (G, NB, BS, H, d); ``prefill`` leaves (G, 1, L, H,
+    d).  Rows outside [start, length) are redirected to the scratch block
+    (block 0), which the engine never grants.
+    """
+    g, nb, bs = pool["k"].shape[:3]
+    l = prefill["k"].shape[2]
+    i = jnp.arange(l, dtype=jnp.int32)
+    valid = (i >= start) & (i < length)
+    idx = paged_row_indices(jnp.asarray(table_row)[None, :], i[None, :],
+                            bs)[0]
+    idx = jnp.where(valid, idx, i % bs)          # scratch block rows
+    quant_pool = "k_scale" in pool
+    quant_src = "k_scale" in prefill
+
+    def scat(p, rows):
+        flat = p.reshape((nb * bs,) + p.shape[2:])
+        flat = flat.at[idx].set(rows.astype(p.dtype))
+        return flat.reshape(p.shape)
+
+    out = {}
+    if quant_pool and not quant_src:
+        def one_group(pk, pv, psk, psv, sk, sv):
+            kq, ks = quantize_rows(sk)
+            vq, vs = quantize_rows(sv)
+            return (scat(pk, kq), scat(pv, vq), scat(psk, ks),
+                    scat(psv, vs))
+        k, v, ks_, vs_ = jax.vmap(one_group)(
+            pool["k"], pool["v"], pool["k_scale"], pool["v_scale"],
+            prefill["k"][:, 0], prefill["v"][:, 0])
+        out = {"k": k, "v": v, "k_scale": ks_, "v_scale": vs_}
+    else:
+        for key in pool:
+            out[key] = jax.vmap(scat)(pool[key], prefill[key][:, 0])
+    return out
+
+
+def release_slot_paged(cache: dict, slot) -> dict:
+    """Neutralize a retired slot: point its table row at the scratch block
+    and rewind ``pos`` so the still-running fused step can never write
+    into blocks that were freed (and possibly re-granted)."""
+    bt = cache["block_tables"]
+    bt = jax.lax.dynamic_update_index_in_dim(
+        bt, jnp.zeros((bt.shape[1],), bt.dtype), slot, 0)
+    pos = jax.lax.dynamic_update_index_in_dim(
+        cache["pos"], jnp.zeros((), cache["pos"].dtype), slot, 0)
+    return dict(cache, pos=pos, block_tables=bt)
+
+
 def cache_specs(cfg: ModelConfig, batch_spec, seq_spec) -> dict:
     """PartitionSpecs matching :func:`init_cache` (leading group axis)."""
     layers = []
@@ -327,6 +461,11 @@ def forward_decoder(params: dict, cfg: ModelConfig, x: jax.Array, *,
     """
     pos = cache["pos"] if (cache is not None and phase == "decode") else 0
     layer_caches = cache["layers"] if cache is not None else None
+    # paged serving cache: block tables are read-only within a step, so
+    # they ride the scan closure (not the carry) — one (B, MBS) int32 array
+    # shared by every full-attention layer group
+    block_tables = (cache.get("block_tables")
+                    if (cache is not None and phase == "decode") else None)
 
     train = phase == "train"
 
@@ -336,7 +475,8 @@ def forward_decoder(params: dict, cfg: ModelConfig, x: jax.Array, *,
             moe_i = bool(cfg.is_moe and cfg.moe_pattern[i])
             x, nc, pend = apply_layer(gparams[i], cfg, kind, x, gcache[i],
                                       pos, phase, mesh, enc_out=enc_out,
-                                      use_moe=moe_i)
+                                      use_moe=moe_i,
+                                      block_tables=block_tables)
             new_caches.append(nc)
             pendings.append(pend)
         return x, tuple(new_caches), tuple(pendings)
@@ -363,7 +503,10 @@ def forward_decoder(params: dict, cfg: ModelConfig, x: jax.Array, *,
         idx = jnp.arange(cfg.n_groups, dtype=jnp.int32)
         (x, new_layer_caches), pendings = jax.lax.scan(
             body, (x, layer_caches), (idx, params["layers"]))
-        return x, {"layers": new_layer_caches, "pos": cache["pos"]}, pendings
+        new_cache = {"layers": new_layer_caches, "pos": cache["pos"]}
+        if block_tables is not None:
+            new_cache["block_tables"] = block_tables
+        return x, new_cache, pendings
 
     # Training / cache-less forward: plain scan over stacked params with
     # (sqrt-)remat; for large models the per-group residual carry is
@@ -454,4 +597,7 @@ def commit_cache(cfg: ModelConfig, cache: dict, pendings, n_commit,
                 else rwkv_lib.select_rwkv_state
             idx = jnp.clip(nc, 0, sq)
             new_layers.append(jax.vmap(lambda st: sel(st, idx))(stack))
-    return {"layers": tuple(new_layers), "pos": pos + nc}
+    out = {"layers": tuple(new_layers), "pos": pos + nc}
+    if "block_tables" in cache:
+        out["block_tables"] = cache["block_tables"]
+    return out

@@ -45,11 +45,16 @@ import time
 from dataclasses import dataclass, field
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ATTN, ModelConfig
+from repro.core.interleave import BatchState
 from repro.core.pipeline import SpecOffloadEngine, required_cache_len
 from repro.core.planner import ParaSpecPlanner, Policy, Workload
+from repro.models.transformer import (admit_sequence_paged, init_cache,
+                                      init_paged_cache, release_slot_paged)
+from repro.serving.paged_kv import BlockAllocator, prefix_block_keys
 from repro.sim.hardware import ENV1, HardwareSpec
 
 
@@ -109,6 +114,17 @@ class SchedulerConfig:
     replan_threshold: float | None = None  # occupancy drift that triggers
                                   # an online ParaSpec re-search (None: off)
     replan_interval: int = 32     # rounds between drift checks
+    # ---- paged KV substrate (target full-attention layers only) ----
+    paged: bool = True            # block-table pool instead of per-slot
+                                  # (B, max_len) target KV; False keeps the
+                                  # contiguous splice path
+    block_size: int = 16          # tokens per KV block
+    num_blocks: int | None = None # per-half pool size (incl. the reserved
+                                  # scratch block 0); None -> enough for
+                                  # every slot at full max_len (no pressure)
+    kv_quant_cold: bool = False   # int8-quantize the pool (quantize-on-
+                                  # write; contiguous-int8 numerics)
+    prefix_cache: bool = True     # hash-chain dedup of full prompt blocks
 
 
 @dataclass
@@ -117,6 +133,7 @@ class _Slot:
     req: ServeRequest | None = None
     emitted: list = field(default_factory=list)
     done: bool = True             # True: free (or holding a retired seq)
+    blocks: list = field(default_factory=list)  # granted KV blocks (paged)
 
 
 def latency_percentiles(done: list, attr: str = "latency_s",
@@ -153,8 +170,14 @@ class ServingEngine:
                                           n_cand=self.n_cand,
                                           eos_id=self.eos_id)
         self._splice = jax.jit(_splice_slot)
+        self._admit_paged = jax.jit(admit_sequence_paged,
+                                    static_argnums=(0,))
+        self._release_paged = jax.jit(release_slot_paged)
         self._halves = None           # two BatchState of max_batch slots
         self._slots = None            # parallel host-side _Slot maps
+        self._allocs = None           # per-half BlockAllocator (paged mode)
+        self._num_blocks = self.config.num_blocks
+        self._blocks_granted_seqs = 0  # admissions (for avg-blocks metric)
         self._v = 0                   # index of the next verify half
         self._max_len = self.config.max_len
         self._now = 0.0               # virtual clock (s since run() start)
@@ -183,6 +206,13 @@ class ServingEngine:
                     f"request {req.rid} needs {need} KV slots > engine "
                     f"capacity {self._max_len}; raise SchedulerConfig."
                     f"max_len before the first run()")
+        if self.config.paged and self.config.num_blocks is not None:
+            nb = self._required_blocks(req)
+            if nb > self.config.num_blocks - 1:
+                raise ValueError(
+                    f"request {req.rid} needs {nb} KV blocks > pool "
+                    f"capacity {self.config.num_blocks - 1}; raise "
+                    f"SchedulerConfig.num_blocks")
         self._queue.append(req)
 
     def pending(self) -> int:
@@ -196,6 +226,9 @@ class ServingEngine:
         return required_cache_len(l, req.max_new_tokens,
                                   self.config.n_cand)
 
+    def _required_blocks(self, req: ServeRequest) -> int:
+        return -(-self._required_len(req) // self.config.block_size)
+
     # ------------------------------------------------------------------
     # slot bootstrap / admission
 
@@ -208,12 +241,37 @@ class ServingEngine:
                 raise ValueError("run() with an empty queue and no "
                                  "SchedulerConfig.max_len to size caches")
             self._max_len = max(self._required_len(r) for r in self._queue)
-        # Park a 1-token dummy sequence in every slot: shapes are fixed
-        # forever, real requests are spliced in by _admit().
-        dummy = np.zeros((cfg.max_batch, 1), np.int32)
-        self._halves = [
-            self.engine.prefill_batch(dummy, self._max_len, cfg.max_batch)
-            for _ in range(2)]
+        if cfg.paged:
+            # Round capacity to a block multiple so the contiguous
+            # (B=1, max_len) prefill caches and the paged serving caches
+            # agree on every non-ATTN leaf shape.
+            bs = cfg.block_size
+            self._max_len = -(-self._max_len // bs) * bs
+            mbs = self._max_len // bs
+            if self._num_blocks is None:
+                # pressure-free default: every slot can reach max_len
+                self._num_blocks = 1 + cfg.max_batch * mbs
+            nb = self._num_blocks
+            self._halves = []
+            for _ in range(2):
+                tc = init_paged_cache(
+                    self.target_cfg, cfg.max_batch, nb, bs, mbs,
+                    kv_quant=True if cfg.kv_quant_cold else None)
+                dc = init_cache(self.draft_cfg, cfg.max_batch,
+                                self._max_len)
+                self._halves.append(BatchState(
+                    target_cache=tc, draft_cache=dc,
+                    t_next=jnp.zeros((cfg.max_batch,), jnp.int32),
+                    drafts=None, draft_pendings=None, emitted=[]))
+            self._allocs = [BlockAllocator(nb) for _ in range(2)]
+        else:
+            # Park a 1-token dummy sequence in every slot: shapes are fixed
+            # forever, real requests are spliced in by _admit().
+            dummy = np.zeros((cfg.max_batch, 1), np.int32)
+            self._halves = [
+                self.engine.prefill_batch(dummy, self._max_len,
+                                          cfg.max_batch)
+                for _ in range(2)]
         self._slots = [[_Slot() for _ in range(cfg.max_batch)]
                        for _ in range(2)]
 
@@ -222,6 +280,35 @@ class ServingEngine:
             return sorted(arrived,
                           key=lambda r: (r.max_new_tokens, len(r.prompt)))
         return arrived                # fifo: submission order
+
+    def _try_grant(self, h: int, prompt: np.ndarray,
+                   req: ServeRequest) -> tuple | None:
+        """Reserve the request's full block budget from half ``h``'s
+        allocator, reusing prefix-cached full-prompt blocks.  Returns
+        ``(block_ids, n_shared)``, or None when the pool is currently
+        short — the request then simply stays queued until retirements
+        free blocks (never a crash; tested in test_paged_kv.py)."""
+        cfg = self.config
+        alloc = self._allocs[h]
+        need = required_cache_len(len(prompt), req.max_new_tokens,
+                                  cfg.n_cand)
+        n_need = -(-need // cfg.block_size)
+        keys = (prefix_block_keys(prompt, cfg.block_size)
+                if cfg.prefix_cache else [])
+        shared = []
+        for key in keys:
+            bid = alloc.lookup(key)
+            if bid is None:
+                break
+            shared.append(bid)
+        if not alloc.can_alloc(n_need - len(shared)):
+            for bid in shared:           # roll back the prefix refs
+                alloc.decref(bid)
+            return None
+        block_ids = shared + alloc.alloc(n_need - len(shared))
+        for j in range(len(shared), len(keys)):
+            alloc.register(block_ids[j], keys[j])
+        return block_ids, len(shared)
 
     def _admit(self, h: int) -> list:
         """Admit arrived requests into free slots of half ``h``.  Only
@@ -234,9 +321,9 @@ class ServingEngine:
         if not free or not self._queue:
             return finished
         arrived = [r for r in self._queue if r.arrival_s <= self._now]
-        for slot_idx, req in zip(free, self._admission_order(arrived)):
-            self._queue.remove(req)
-            req.admitted_s = self._now
+        for req in self._admission_order(arrived):
+            if not free:
+                break
             prompt = np.asarray(req.prompt, np.int32)
             if cfg.length_bucket:
                 b = cfg.length_bucket
@@ -244,11 +331,28 @@ class ServingEngine:
                 prompt = np.concatenate(
                     [np.full(tgt - len(prompt), cfg.pad_id, np.int32),
                      prompt])
+            grant = None
+            if cfg.paged:
+                grant = self._try_grant(h, prompt, req)
+                if grant is None:        # block pressure: stays queued
+                    continue
+            slot_idx = free.pop(0)
+            self._queue.remove(req)
+            req.admitted_s = self._now
             t_wall = time.time()
             st = self.engine.prefill_batch(prompt[None, :], self._max_len,
                                            cfg.prefill_chunk)
-            half.target_cache = self._splice(half.target_cache,
-                                             st.target_cache, slot_idx)
+            if cfg.paged:
+                block_ids, n_shared = grant
+                row = np.zeros(self._max_len // cfg.block_size, np.int32)
+                row[:len(block_ids)] = block_ids
+                half.target_cache = self._admit_paged(
+                    self.target_cfg, half.target_cache, st.target_cache,
+                    slot_idx, jnp.asarray(row), len(prompt), n_shared)
+                self._blocks_granted_seqs += 1
+            else:
+                half.target_cache = self._splice(half.target_cache,
+                                                 st.target_cache, slot_idx)
             half.draft_cache = self._splice(half.draft_cache,
                                             st.draft_cache, slot_idx)
             t0 = int(np.asarray(st.t_next)[0])
@@ -257,23 +361,36 @@ class ServingEngine:
             req.first_token_s = self._now
             slot = slots[slot_idx]
             slot.req, slot.emitted, slot.done = req, [t0], False
+            slot.blocks = list(grant[0]) if grant else []
             self._len_sum += len(prompt)
             self._gen_sum += req.max_new_tokens
             self._req_seen += 1
             # a 1-token request (or instant EOS) finishes at admission
             if ((cfg.eos_id >= 0 and t0 == cfg.eos_id)
                     or req.max_new_tokens <= 1):
-                self._finish(slot)
+                self._finish(h, slot_idx)
                 finished.append(req)
         return finished
 
-    def _finish(self, slot: _Slot):
+    def _finish(self, h: int, idx: int):
+        slot = self._slots[h][idx]
         req = slot.req
         req.result = np.asarray(slot.emitted, np.int32)
         req.finished_s = self._now
         req.latency_s = self._now - req.arrival_s
         self._tokens_out += len(req.result)
         slot.req, slot.emitted, slot.done = None, [], True
+        if self.config.paged and slot.blocks:
+            # Null the slot's table row + pos *before* its blocks can be
+            # re-granted: the retired slot keeps riding the fused step,
+            # and its decode writes must land in the scratch block, not
+            # in blocks now owned by another sequence.
+            half = self._halves[h]
+            half.target_cache = self._release_paged(half.target_cache, idx)
+            alloc = self._allocs[h]
+            for bid in slot.blocks:
+                alloc.decref(bid)
+            slot.blocks = []
 
     def _process_emissions(self, h: int, out) -> list:
         """EOS-aware retirement: append this round's verified tokens to
@@ -288,7 +405,7 @@ class ServingEngine:
                 slot.emitted.append(int(t))
                 if ((cfg.eos_id >= 0 and int(t) == cfg.eos_id)
                         or len(slot.emitted) >= req.max_new_tokens):
-                    self._finish(slot)
+                    self._finish(h, idx)
                     finished.append(req)
                     break
         return finished
@@ -316,7 +433,8 @@ class ServingEngine:
                                      // max(1, self._req_seen)),
                       gen_len=max(1, self._gen_sum
                                   // max(1, self._req_seen)),
-                      occupancy=max(occ, 1e-3))
+                      occupancy=max(occ, 1e-3),
+                      kv_bytes_per_seq=self._kv_bytes_per_seq())
         rep = ParaSpecPlanner(self.target_cfg, self.draft_cfg,
                               self.hw).search(wl)
         self.suggested_policy = rep.policy
@@ -384,6 +502,56 @@ class ServingEngine:
         toks = sum(len(r.result) for r in done)
         return toks / max(self._wall_s, 1e-9)
 
+    def _attn_cache_bytes(self, cache: dict) -> int:
+        """Bytes of the full-attention KV leaves of a target cache."""
+        total = 0
+        for i, kind in enumerate(self.target_cfg.layer_pattern):
+            if kind == ATTN:
+                total += sum(int(leaf.nbytes)
+                             for leaf in jax.tree.leaves(cache["layers"][i]))
+        return total
+
+    def kv_stats(self) -> dict:
+        """KV-memory accounting for the target full-attention layers.
+
+        ``peak_kv_bytes`` is the serving-lifetime high-water mark of KV a
+        scheduler must actually keep resident: granted blocks for the
+        paged substrate, the whole (B, max_len) cache for the contiguous
+        one (every slot is always materialized there).
+        """
+        if self._halves is None:
+            return {}
+        cfg = self.config
+        if cfg.paged:
+            pool_bytes = self._attn_cache_bytes(self._halves[0].target_cache)
+            per_block = pool_bytes / self._num_blocks
+            peak = sum(a.peak_used for a in self._allocs)
+            return {"paged": True, "block_size": cfg.block_size,
+                    "num_blocks_per_half": self._num_blocks,
+                    "bytes_per_block": per_block,
+                    "pool_bytes_total": 2.0 * pool_bytes,
+                    "peak_blocks_in_use": peak,
+                    "peak_kv_bytes": peak * per_block,
+                    "prefix_hits": sum(a.prefix_hits
+                                       for a in self._allocs),
+                    "prefix_evictions": sum(a.evictions
+                                            for a in self._allocs),
+                    "allocators": [a.stats() for a in self._allocs]}
+        full = float(sum(self._attn_cache_bytes(hf.target_cache)
+                         for hf in self._halves))
+        return {"paged": False, "pool_bytes_total": full,
+                "peak_kv_bytes": full}
+
+    def _kv_bytes_per_seq(self) -> float | None:
+        """Average resident target-KV bytes per admitted sequence
+        (block granularity; None before any paged admission)."""
+        if (not self.config.paged or self._allocs is None
+                or not self._blocks_granted_seqs):
+            return None
+        ks = self.kv_stats()
+        granted = sum(a.granted_total for a in self._allocs)
+        return ks["bytes_per_block"] * granted / self._blocks_granted_seqs
+
     def stats(self) -> dict:
         """Engine-level serving metrics."""
         pipe = self.engine._pipe
@@ -396,6 +564,7 @@ class ServingEngine:
             "fused_compiles": 0 if pipe is None
             else pipe.trace_counts["fused"],
             "replans": len(self.replan_events),
+            "kv": self.kv_stats(),
         }
 
 

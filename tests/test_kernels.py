@@ -60,6 +60,68 @@ def test_decode_attention(dtype, b, hq, hkv, m, skv, d, window):
                                np.asarray(want, np.float32), **TOL[dtype])
 
 
+def _paged_case(key, b, hkv, mbs, bs, d, dtype, quant=False):
+    """Random pool + disjoint per-sequence block tables + lengths."""
+    ks = jax.random.split(key, 4)
+    nb = b * mbs + 3                     # a few never-referenced blocks
+    perm = jax.random.permutation(ks[0], nb)[:b * mbs].reshape(b, mbs)
+    if quant:
+        kp = jax.random.randint(ks[1], (nb, bs, hkv, d), -127,
+                                128).astype(jnp.int8)
+        vp = jax.random.randint(ks[2], (nb, bs, hkv, d), -127,
+                                128).astype(jnp.int8)
+        scs = jax.random.uniform(ks[3], (2, nb, bs, hkv, 1),
+                                 minval=0.01, maxval=0.1)
+        scales = dict(k_scale=scs[0], v_scale=scs[1])
+    else:
+        kp = _rand((nb, bs, hkv, d), dtype, ks[1])
+        vp = _rand((nb, bs, hkv, d), dtype, ks[2])
+        scales = dict(k_scale=None, v_scale=None)
+    return kp, vp, perm.astype(jnp.int32), scales
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,hq,hkv,m,mbs,bs,d,quant", [
+    (2, 4, 2, 1, 4, 16, 64, False),    # plain paged decode
+    (2, 4, 2, 5, 4, 16, 64, False),    # speculative verify (n_cand=4)
+    (1, 8, 1, 4, 8, 8, 128, False),    # MQA, small blocks
+    (2, 2, 2, 3, 3, 32, 64, True),     # int8 cold blocks + scales
+    (1, 4, 2, 4, 5, 16, 64, True),     # int8, MBS not covering full pool
+])
+def test_paged_decode_attention(dtype, b, hq, hkv, m, mbs, bs, d, quant):
+    ks = jax.random.split(KEY, 3)
+    q = _rand((b, hq, m, d), dtype, ks[0])
+    kp, vp, bt, scales = _paged_case(ks[1], b, hkv, mbs, bs, d, dtype, quant)
+    lengths = jax.random.randint(ks[2], (b,), m + 1,
+                                 mbs * bs + 1).astype(jnp.int32)
+    got = ops.paged_decode_attention(q, kp, vp, bt, lengths,
+                                     interpret=True, **scales)
+    want = ref.paged_decode_attention_ref(q, kp, vp, bt, lengths, **scales)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_paged_matches_contiguous_decode():
+    """A paged cache holding the same rows as a contiguous cache must give
+    the contiguous kernel's output exactly (table = identity shuffle)."""
+    b, hq, hkv, m, bs, mbs, d = 2, 4, 2, 3, 16, 4, 64
+    skv = bs * mbs
+    ks = jax.random.split(KEY, 4)
+    q = _rand((b, hq, m, d), jnp.float32, ks[0])
+    k = _rand((b, hkv, skv, d), jnp.float32, ks[1])
+    v = _rand((b, hkv, skv, d), jnp.float32, ks[2])
+    lengths = jnp.array([skv - 5, skv - 17], jnp.int32)
+    # pool rows [seq b, logical block j] live at physical block b*mbs + j
+    kp = k.transpose(0, 2, 1, 3).reshape(b * mbs, bs, hkv, d)
+    vp = v.transpose(0, 2, 1, 3).reshape(b * mbs, bs, hkv, d)
+    bt = jnp.arange(b * mbs, dtype=jnp.int32).reshape(b, mbs)
+    want = ops.decode_attention(q, k, v, lengths, block_k=bs,
+                                interpret=True)
+    got = ops.paged_decode_attention(q, kp, vp, bt, lengths, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("e,c,d,f", [
     (4, 128, 64, 256),

@@ -184,6 +184,29 @@ def test_engine_reusable_across_runs():
     assert se.stats()["fused_compiles"] == 1
 
 
+def test_contiguous_mode_regression(jitted):
+    """SchedulerConfig(paged=False) keeps the original per-slot
+    (B, max_len) splice path working and lossless."""
+    tcfg = tiny_config(("attn",))
+    dcfg = tiny_draft_config()
+    se = ServingEngine(tcfg, dcfg,
+                       config=SchedulerConfig(max_batch=2, n_cand=2,
+                                              paged=False))
+    se.init_from_seed(0)
+    rng = np.random.default_rng(21)
+    reqs = [ServeRequest(i, rng.integers(0, 61, 8).astype(np.int32), 5)
+            for i in range(3)]
+    for r in reqs:
+        se.submit(r)
+    done = se.run()
+    assert len(done) == 3
+    assert se.kv_stats()["paged"] is False
+    for r in reqs:
+        ref = greedy_reference(se.engine.tp, tcfg,
+                               np.asarray(r.prompt)[None, :], 5, 64, jitted)
+        assert (np.asarray(ref)[0] == r.result).all()
+
+
 def test_submit_rejects_oversized_request():
     tcfg = tiny_config(("attn",))
     dcfg = tiny_draft_config()
@@ -214,6 +237,26 @@ def test_planner_search_with_occupancy_feasible():
     pl = ParaSpecPlanner(MIXTRAL_8X7B, MISTRAL_7B, ENV1)
     rep = pl.search(Workload(503, 48, 0.75, occupancy=0.4))
     assert rep.feasible and rep.throughput > 0
+
+
+def test_planner_kv_bytes_per_seq_term():
+    """Measured resident-KV bytes (int8 + block-rounded) shrink the
+    host-attention KV traffic term, never the compute terms."""
+    from repro.core.planner import stored_kv_bytes_per_seq
+    cfg = MIXTRAL_8X7B
+    ctx = 503 + 24
+    bf16 = stored_kv_bytes_per_seq(cfg, ctx)
+    int8 = stored_kv_bytes_per_seq(cfg, ctx, quant=True)
+    paged = stored_kv_bytes_per_seq(cfg, ctx, block_size=16)
+    assert int8 < bf16                      # 1B + scales beats 2B values
+    assert paged >= bf16                    # fragmentation rounds up
+    pl = ParaSpecPlanner(cfg, MISTRAL_7B, ENV1)
+    pol = Policy(80, 192, 8, 8)
+    base = pl.evaluate(pol, Workload(503, 48, 0.75))
+    quant = pl.evaluate(pol, Workload(503, 48, 0.75,
+                                      kv_bytes_per_seq=int8))
+    assert quant.detail["t_attn_host"] <= base.detail["t_attn_host"]
+    assert quant.throughput >= base.throughput
 
 
 def test_online_replan_fires_on_occupancy_drift():
