@@ -9,6 +9,10 @@ benchmarks/run.py: ``(name, value, derived)``.
     PYTHONPATH=src python -m benchmarks.serving_bench [--requests N]
     # paged-vs-contiguous A/B on the same trace -> BENCH_serving_paged.json
     PYTHONPATH=src python -m benchmarks.serving_bench --compare [--out F]
+    # observability run: Perfetto trace + metrics snapshot + utilization
+    # digest (paper's bubble/GPU-busy metric) -> BENCH_serving_obs.json
+    PYTHONPATH=src python -m benchmarks.serving_bench \\
+        --trace-out trace.json --metrics-out metrics.json
 """
 from __future__ import annotations
 
@@ -17,7 +21,7 @@ import numpy as np
 
 def run(rows: list, requests: int = 10, gen: int = 8, rate: float = 2.0,
         seed: int = 0, paged: bool = True, kv_quant_cold: bool = False,
-        prefix: str = "serving") -> dict:
+        prefix: str = "serving", trace: bool = False) -> dict:
     from repro.configs.base import MIXTRAL_8X7B, MISTRAL_7B
     from repro.serving.engine import (SchedulerConfig, ServingEngine,
                                       latency_percentiles)
@@ -32,7 +36,8 @@ def run(rows: list, requests: int = 10, gen: int = 8, rate: float = 2.0,
                         config=SchedulerConfig(max_batch=2, n_cand=2,
                                                length_bucket=16,
                                                paged=paged,
-                                               kv_quant_cold=kv_quant_cold))
+                                               kv_quant_cold=kv_quant_cold,
+                                               trace=trace))
     eng.init_from_seed(seed)
 
     rng = np.random.default_rng(seed)
@@ -62,7 +67,8 @@ def run(rows: list, requests: int = 10, gen: int = 8, rate: float = 2.0,
                  "measured"))
     rows.append((f"{prefix}/fused_compiles", float(st["fused_compiles"]),
                  "measured"))
-    return {"done": done, "stats": st, "ttft": ttft, "e2e": e2e}
+    return {"done": done, "stats": st, "ttft": ttft, "e2e": e2e,
+            "engine": eng}
 
 
 def _summary(out: dict) -> dict:
@@ -115,6 +121,72 @@ def compare(requests: int = 10, gen: int = 8, rate: float = 2.0,
     return report
 
 
+def obs_run(requests: int = 10, gen: int = 8, rate: float = 2.0,
+            seed: int = 0, trace_out: str | None = None,
+            metrics_out: str | None = None) -> dict:
+    """Observability benchmark: the same Poisson trace twice — once with
+    the span tracer on (utilization / bubble accounting, Perfetto trace,
+    metrics snapshot) and once with tracing disabled (throughput parity
+    + fused-compile baseline).  Returns the ``BENCH_serving_obs.json``
+    digest; writes the raw trace/metrics JSON when paths are given.
+    """
+    import json
+
+    rows: list = []
+    traced = run(rows, requests, gen, rate, seed, prefix="obs",
+                 trace=True)
+    eng = traced["engine"]
+    rep = eng.metrics()
+    util = rep["utilization"]
+    if trace_out:
+        with open(trace_out, "w") as f:
+            json.dump(eng.chrome_trace(), f)
+    if metrics_out:
+        with open(metrics_out, "w") as f:
+            json.dump(rep, f, indent=2)
+
+    # parity leg: tracing off must keep the fused step at one compile and
+    # throughput within noise of the paged baseline
+    rows2: list = []
+    plain = run(rows2, requests, gen, rate, seed, prefix="plain")
+    snap = rep["metrics"]
+    digest = {
+        "trace": {"requests": requests, "gen": gen, "rate_rps": rate,
+                  "seed": seed,
+                  "config": "MIXTRAL_8X7B.reduced(d_model=64) / "
+                            "max_batch=2 x2, n_cand=2"},
+        "utilization": {
+            "rounds": util["rounds"],
+            "gpu_busy_frac": util["gpu_busy_frac"],
+            "mean_round_busy_frac": util["mean_round_busy_frac"],
+            "busy_s": util["busy_s"],
+            "stall_s": util["stall_s"],
+            "idle_s": util["idle_s"],
+            "per_round_busy_frac": [r["busy_frac"]
+                                    for r in util["per_round"]],
+            "per_round_stall_s": [r["stall_s"]
+                                  for r in util["per_round"]],
+        },
+        "transfers": {
+            "bytes_by_tier": snap["counters"].get(
+                "transfer_bytes_total", {}),
+            "seconds_by_tier": snap["counters"].get(
+                "transfer_seconds_total", {}),
+        },
+        "acceptance_hist": snap["histograms"].get(
+            "spec_accepted_tokens", {}),
+        "kv_gauges": {k: v for k, v in snap["gauges"].items()
+                      if k.startswith("kv_")},
+        "pipeline_traces": snap["counters"].get(
+            "pipeline_traces_total", {}),
+        "traced_tok_per_s": traced["stats"]["tok_per_s"],
+        "untraced_tok_per_s": plain["stats"]["tok_per_s"],
+        "untraced_fused_compiles": plain["stats"]["fused_compiles"],
+        "trace_events": len(eng.chrome_trace()["traceEvents"]),
+    }
+    return digest
+
+
 def main():
     import argparse
     import json
@@ -126,7 +198,33 @@ def main():
                     help="contiguous vs paged A/B on one fixed trace")
     ap.add_argument("--out", default="BENCH_serving_paged.json",
                     help="JSON report path for --compare")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto-loadable Chrome trace JSON "
+                         "(enables the observability run)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics snapshot + utilization "
+                         "report JSON (enables the observability run)")
+    ap.add_argument("--obs-out", default="BENCH_serving_obs.json",
+                    help="utilization digest path for the obs run")
     args = ap.parse_args()
+    if args.trace_out or args.metrics_out:
+        digest = obs_run(args.requests, args.gen, args.rate,
+                         trace_out=args.trace_out,
+                         metrics_out=args.metrics_out)
+        with open(args.obs_out, "w") as f:
+            json.dump(digest, f, indent=2)
+        u = digest["utilization"]
+        print(f"wrote {args.obs_out}"
+              + (f", {args.trace_out}" if args.trace_out else "")
+              + (f", {args.metrics_out}" if args.metrics_out else ""))
+        print(f"GPU busy fraction: {u['gpu_busy_frac']:.2f} over "
+              f"{u['rounds']} rounds "
+              f"(stall {u['stall_s']:.2f}s, idle {u['idle_s']:.2f}s)")
+        print(f"tok/s traced {digest['traced_tok_per_s']:.2f} vs "
+              f"untraced {digest['untraced_tok_per_s']:.2f}; "
+              f"fused compiles (untraced) "
+              f"{digest['untraced_fused_compiles']}")
+        return
     if args.compare:
         report = compare(args.requests, args.gen, args.rate)
         with open(args.out, "w") as f:

@@ -42,6 +42,7 @@ from repro.configs.base import ModelConfig
 from repro.core.spec_decode import (draft_generate, greedy_acceptance,
                                     rollback_draft)
 from repro.models import model as M
+from repro.obs import NULL_OBS
 
 
 @dataclass
@@ -112,12 +113,14 @@ class InterleavedPipeline:
     """
 
     def __init__(self, target_params, target_cfg, draft_params, draft_cfg,
-                 n_cand: int, mesh=None):
+                 n_cand: int, mesh=None, obs=None):
         self.tp, self.tcfg = target_params, target_cfg
         self.dp, self.dcfg = draft_params, draft_cfg
         self.n_cand = n_cand
         self.mesh = mesh
+        self.obs = obs if obs is not None else NULL_OBS
         self.trace_counts = {"fused": 0, "draft": 0, "rollback": 0}
+        self._exported_traces = {k: 0 for k in self.trace_counts}
         self._fused = jax.jit(
             self._counted("fused", fused_verify_and_draft),
             static_argnames=("target_cfg", "draft_cfg", "n_cand", "mesh"))
@@ -135,15 +138,34 @@ class InterleavedPipeline:
             return fn(*args, **kwargs)
         return wrapper
 
+    def export_trace_counts(self, registry) -> None:
+        """Sync ``trace_counts`` into ``pipeline_traces_total{entry=...}``
+        counters (delta-based: safe to call repeatedly).  A shape-stable
+        serving run must report ``entry="fused"`` == 1 through this path
+        (regression-tested in tests/test_obs.py)."""
+        ctr = registry.counter(
+            "pipeline_traces_total",
+            "jit (re)traces per pipeline entry point; fused must stay 1")
+        for entry, n in self.trace_counts.items():
+            delta = n - self._exported_traces[entry]
+            if delta:
+                ctr.inc(delta, entry=entry)
+                self._exported_traces[entry] = n
+            elif n == 0:
+                ctr.inc(0, entry=entry)   # materialize the zero series
+
     # ------------------------------------------------------------------
     def warmup(self, state: BatchState) -> None:
         """Slot t_0 (Fig. 4): draft candidates for ``state`` so the next
         :meth:`step` can verify it.  No-op if drafts are already staged."""
         if state.drafts is not None:
             return
-        d, _, dc, pend = self._draft_only(self.dp, self.dcfg,
-                                          state.draft_cache, state.t_next,
-                                          self.n_cand)
+        with self.obs.tracer.span("draft_generate", "warmup",
+                                  cat="device") as sp:
+            d, _, dc, pend = self._draft_only(self.dp, self.dcfg,
+                                              state.draft_cache,
+                                              state.t_next, self.n_cand)
+            sp.fence(d)
         state.drafts, state.draft_cache, state.draft_pendings = d, dc, pend
 
     def step(self, verify: BatchState, gen: BatchState,
@@ -162,13 +184,24 @@ class InterleavedPipeline:
         vstate = {"target_cache": verify.target_cache,
                   "t_next": verify.t_next, "drafts": verify.drafts}
         dstate = {"draft_cache": gen.draft_cache, "t_next": gen.t_next}
-        vout, dout = self._fused(self.tp, self.tcfg, self.dp, self.dcfg,
-                                 vstate, dstate, self.n_cand, self.mesh)
+        tr = self.obs.tracer
+        # The fused call is ONE XLA program doing both phases; record it
+        # as anti-phase twins — a verify span plus a mirrored draft span
+        # over the same interval (bubble accounting unions the overlap,
+        # so device-busy time is not double counted).
+        with tr.span("target_verify", "verify(fused)", cat="device") as sp:
+            vout, dout = self._fused(self.tp, self.tcfg, self.dp, self.dcfg,
+                                     vstate, dstate, self.n_cand, self.mesh)
+            sp.fence((vout, dout))
+        if tr.enabled:
+            tr.complete("draft_generate", "draft(fused)", sp.t0, sp.t1,
+                        cat="device")
         # batch V: commit + roll its draft cache back to acceptance
         verify.target_cache = vout["target_cache"]
-        verify.draft_cache = self._rollback(
-            self.dcfg, verify.draft_cache, verify.draft_pendings,
-            vout["n_emitted"])
+        with tr.span("rollback", "rollback", cat="device") as rb:
+            verify.draft_cache = rb.fence(self._rollback(
+                self.dcfg, verify.draft_cache, verify.draft_pendings,
+                vout["n_emitted"]))
         verify.t_next = vout["t_next"]
         verify.drafts, verify.draft_pendings = None, None
         out = RoundOutput(tokens=np.asarray(vout["tokens"]),

@@ -18,6 +18,7 @@ placement logic, copy schedule, and compiled HLO (with explicit
 """
 from __future__ import annotations
 
+import time
 from functools import partial
 
 import jax
@@ -27,6 +28,7 @@ from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.models.transformer import (forward_decoder, init_cache,
                                       logits_from_hidden)
+from repro.obs import NULL_OBS
 
 try:
     from jax.experimental.compute_on import compute_on
@@ -74,6 +76,35 @@ def put_device(tree):
     return jax.device_put(tree, _sharding("device"))
 
 
+def tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def record_transfer(obs, tier: str, nbytes: float, seconds: float,
+                    what: str = "transfer"):
+    """Account one tier transfer in the metrics registry + trace.
+
+    ``tier`` names the link direction ("h2d", "d2h"); bytes and seconds
+    feed the ``transfer_bytes_total`` / ``transfer_seconds_total``
+    counters the bench's utilization report reads, and a completed span
+    lands on the matching trace track.
+    """
+    if not obs.enabled:
+        return
+    obs.metrics.counter(
+        "transfer_bytes_total",
+        "bytes moved across the offload link per tier").inc(
+            float(nbytes), tier=tier)
+    obs.metrics.counter(
+        "transfer_seconds_total",
+        "wall seconds spent on offload-link transfers per tier").inc(
+            max(float(seconds), 0.0), tier=tier)
+    if obs.tracer.enabled:
+        t1 = time.perf_counter()
+        obs.tracer.complete(tier, what, t1 - seconds, t1,
+                            args={"bytes": float(nbytes)})
+
+
 class OffloadedModel:
     """A model whose layer-group weights stream from host per step.
 
@@ -83,12 +114,15 @@ class OffloadedModel:
     """
 
     def __init__(self, cfg: ModelConfig, params: dict,
-                 host_kv: bool = False):
+                 host_kv: bool = False, obs=None):
         self.cfg = cfg
         self.host_kv = host_kv and HAS_COMPUTE_ON
+        self.obs = obs if obs is not None else NULL_OBS
         resident = {k: v for k, v in params.items() if k != "layers"}
         self.params_resident = put_device(resident)
         self.layers_host = put_host(params["layers"])
+        record_transfer(self.obs, "d2h", tree_bytes(self.layers_host),
+                        0.0, what="park_layers")
 
     # -- streamed forward ---------------------------------------------------
 
@@ -107,9 +141,19 @@ class OffloadedModel:
         """host->device copy of the layer stack (the per-step stream).
 
         Dispatch is asynchronous; compute on previously-streamed data
-        overlaps with this copy, which is the paper's prefetch.
+        overlaps with this copy, which is the paper's prefetch.  With a
+        fencing tracer the transfer is blocked to completion (honest
+        link seconds); otherwise only dispatch cost is visible.
         """
-        return put_device(self.layers_host)
+        if not self.obs.enabled:
+            return put_device(self.layers_host)
+        t0 = time.perf_counter()
+        layers = put_device(self.layers_host)
+        if self.obs.tracer.enabled and self.obs.tracer.fence_spans:
+            jax.block_until_ready(layers)
+        record_transfer(self.obs, "h2d", tree_bytes(self.layers_host),
+                        time.perf_counter() - t0, what="stream_layers")
+        return layers
 
     def decode(self, cache, tokens):
         layers_dev = self.stream_layers()

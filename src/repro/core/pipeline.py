@@ -50,6 +50,7 @@ from repro.core.placement import PlacementPlan, plan_placement
 from repro.core.planner import ParaSpecPlanner, Policy, Workload
 from repro.models import model as M
 from repro.models.transformer import init_cache
+from repro.obs import NULL_OBS
 from repro.sim.hardware import ENV1, HardwareSpec
 
 
@@ -74,11 +75,12 @@ class GenerationResult:
 class SpecOffloadEngine:
     def __init__(self, target_cfg: ModelConfig, draft_cfg: ModelConfig,
                  hw: HardwareSpec = ENV1, policy: Policy | None = None,
-                 mesh=None):
+                 mesh=None, obs=None):
         self.tcfg = target_cfg
         self.dcfg = draft_cfg
         self.hw = hw
         self.mesh = mesh
+        self.obs = obs if obs is not None else NULL_OBS
         self.policy = policy
         self.placement = plan_placement(target_cfg, draft_cfg, hw)
         self.tp = None
@@ -101,7 +103,8 @@ class SpecOffloadEngine:
              accept_prob: float = 0.7, occupancy: float = 1.0) -> Policy:
         if self.policy is not None:
             return self.policy
-        planner = ParaSpecPlanner(self.tcfg, self.dcfg, self.hw)
+        planner = ParaSpecPlanner(self.tcfg, self.dcfg, self.hw,
+                                  obs=self.obs)
         rep = planner.search(Workload(prompt_len, gen_len, accept_prob,
                                       occupancy))
         self.policy = rep.policy
@@ -140,10 +143,15 @@ class SpecOffloadEngine:
         """
         assert self.tp is not None, "call load()/init_from_seed() first"
         bs_prefill = bs_prefill or max(1, prompts.shape[0])
-        lg, tc = self._prefill_zigzag(self.tp, self.tcfg, prompts,
-                                      bs_prefill, max_len)
-        _, dc = self._prefill_zigzag(self.dp, self.dcfg, prompts,
-                                     bs_prefill, max_len)
+        with self.obs.tracer.span("prefill", "zigzag_prefill",
+                                  cat="device") as sp:
+            lg, tc = self._prefill_zigzag(self.tp, self.tcfg, prompts,
+                                          bs_prefill, max_len)
+            _, dc = self._prefill_zigzag(self.dp, self.dcfg, prompts,
+                                         bs_prefill, max_len)
+            sp.fence((lg, tc, dc))
+            sp.set("batch", int(prompts.shape[0]))
+            sp.set("prompt_len", int(prompts.shape[1]))
         t0 = jnp.argmax(lg, -1)
         return BatchState(target_cache=tc, draft_cache=dc, t_next=t0,
                           drafts=None, draft_pendings=None,
@@ -154,7 +162,8 @@ class SpecOffloadEngine:
         assert self.tp is not None, "call load()/init_from_seed() first"
         if self._pipe is None or self._pipe.n_cand != n_cand:
             self._pipe = InterleavedPipeline(self.tp, self.tcfg, self.dp,
-                                             self.dcfg, n_cand, self.mesh)
+                                             self.dcfg, n_cand, self.mesh,
+                                             obs=self.obs)
         return self._pipe
 
     def decode_round(self, verify: BatchState, gen: BatchState,

@@ -139,11 +139,15 @@ class ParaSpecPlanner:
     """Offline profiling model + online policy search."""
 
     def __init__(self, target: ModelConfig, draft: ModelConfig,
-                 hw: HardwareSpec, bytes_per_param: int = 2):
+                 hw: HardwareSpec, bytes_per_param: int = 2, obs=None):
         self.target = target
         self.draft = draft
         self.hw = hw
         self.bp = bytes_per_param
+        if obs is None:
+            from repro.obs import NULL_OBS
+            obs = NULL_OBS
+        self.obs = obs
 
     # -- latency model -----------------------------------------------------
 
@@ -263,18 +267,36 @@ class ParaSpecPlanner:
                n_cand_grid=(1, 2, 4, 6, 8)) -> PlanReport:
         """Exhaustive grid search (the paper's space is small)."""
         best = None
-        for bp_ in bs_prefill_grid:
-            for bd in bs_decode_grid:
-                for bdr in bs_draft_grid:
-                    if bdr > bd:
-                        continue
-                    for m in n_cand_grid:
-                        rep = self.evaluate(Policy(bp_, bd, bdr, m), wl)
-                        if not rep.feasible:
+        with self.obs.tracer.span("planner", "policy_search") as sp:
+            for bp_ in bs_prefill_grid:
+                for bd in bs_decode_grid:
+                    for bdr in bs_draft_grid:
+                        if bdr > bd:
                             continue
-                        if best is None or rep.throughput > best.throughput:
-                            best = rep
+                        for m in n_cand_grid:
+                            rep = self.evaluate(Policy(bp_, bd, bdr, m), wl)
+                            if not rep.feasible:
+                                continue
+                            if (best is None
+                                    or rep.throughput > best.throughput):
+                                best = rep
+            if best is not None:
+                sp.set("policy", str(best.policy.astuple()))
+                sp.set("occupancy", wl.occupancy)
         if best is None:
             raise ValueError("no feasible policy — model too large for host+"
                              "accelerator memory")
+        if self.obs.enabled:
+            self.obs.tracer.instant(
+                "planner", "replan",
+                {"bs_prefill": best.policy.bs_prefill,
+                 "bs_decode": best.policy.bs_decode,
+                 "bs_draft": best.policy.bs_draft,
+                 "n_cand": best.policy.n_cand,
+                 "occupancy": wl.occupancy,
+                 "modeled_throughput": best.throughput})
+            self.obs.metrics.counter(
+                "planner_searches_total",
+                "ParaSpec policy searches (offline + online replans)"
+            ).inc(1)
         return best

@@ -66,6 +66,31 @@ def expected_generated_paper_eq12(p: float, n_cand: int) -> float:
                   - (n_cand + 1) * p ** (n_cand + 1) + 1) / (1 - p))
 
 
+def record_acceptance(metrics, n_accept, n_cand: int, live_mask=None):
+    """Observe one verified round's per-sequence accepted-draft counts
+    into the registry's acceptance histogram (host-side — call with the
+    materialized ``RoundOutput.n_accept``, never inside jit).
+
+    ``live_mask`` drops slots holding retired/dummy sequences so the
+    histogram reflects real requests only.  The histogram's integer
+    buckets 0..n_cand make the paper's acceptance-rate estimate exact:
+    ``sum / (count * n_cand)`` is the measured per-round acceptance.
+    """
+    if not metrics.enabled:
+        return
+    import numpy as _np
+    from repro.obs.metrics import acceptance_buckets
+    hist = metrics.histogram(
+        "spec_accepted_tokens",
+        "accepted draft tokens per sequence per verified round",
+        buckets=acceptance_buckets(n_cand))
+    arr = _np.asarray(n_accept)
+    if live_mask is not None:
+        arr = arr[_np.asarray(live_mask)]
+    for v in arr.tolist():
+        hist.observe(float(v))
+
+
 # ---------------------------------------------------------------------------
 # acceptance rules
 

@@ -1,0 +1,185 @@
+"""Schema validation for the obs subsystem's two export formats.
+
+Dependency-free validators (no jsonschema) shared by the test suite and
+the CI smoke step:
+
+* :func:`validate_chrome_trace` — Chrome trace-event JSON object format
+  (the Perfetto / ``chrome://tracing`` input): required keys per event
+  phase, non-negative ``ts``/``dur``, consistent pid/tid tracks, and a
+  ``thread_name`` metadata event for every tid that carries spans.
+* :func:`validate_metrics_snapshot` — the registry's JSON snapshot:
+  kind sections, histogram bucket monotonicity, ``count`` == ``+Inf``
+  cumulative count.
+* :func:`parse_prometheus_text` — minimal exposition-format parser used
+  by the round-trip test (``# TYPE`` tracking, label unpacking).
+
+Validators return a list of problem strings — empty means valid — so
+callers can assert ``== []`` and get every violation at once.
+
+CLI (used by CI after the bench smoke run)::
+
+    python -m repro.obs.schema trace.json metrics.json
+"""
+from __future__ import annotations
+
+import json
+import re
+
+_REQUIRED_BY_PHASE = {
+    "X": ("name", "ts", "dur", "pid", "tid"),
+    "i": ("name", "ts", "pid", "tid"),
+    "C": ("name", "ts", "pid", "tid", "args"),
+    "M": ("name", "pid", "args"),
+}
+
+
+def validate_chrome_trace(obj) -> list:
+    """Problems with a Chrome trace-event JSON object ([] == valid)."""
+    probs = []
+    if not isinstance(obj, dict) or "traceEvents" not in obj:
+        return ["top level must be an object with a 'traceEvents' list"]
+    events = obj["traceEvents"]
+    if not isinstance(events, list):
+        return ["'traceEvents' must be a list"]
+    named_tids, span_tids = set(), set()
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            probs.append(f"event {i}: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in _REQUIRED_BY_PHASE:
+            probs.append(f"event {i}: unsupported phase {ph!r}")
+            continue
+        for key in _REQUIRED_BY_PHASE[ph]:
+            if key not in ev:
+                probs.append(f"event {i} (ph={ph}): missing {key!r}")
+        if ph == "M" and ev.get("name") == "thread_name":
+            named_tids.add((ev.get("pid"), ev.get("tid")))
+        if ph in ("X", "i", "C"):
+            span_tids.add((ev.get("pid"), ev.get("tid")))
+            ts = ev.get("ts")
+            if not isinstance(ts, (int, float)) or ts < 0:
+                probs.append(f"event {i}: ts {ts!r} not a number >= 0")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                probs.append(f"event {i}: dur {dur!r} not a number >= 0")
+        if ph == "i" and ev.get("s") not in (None, "t", "p", "g"):
+            probs.append(f"event {i}: instant scope {ev.get('s')!r}")
+    for pidtid in sorted(span_tids - named_tids):
+        probs.append(f"track {pidtid} has events but no thread_name "
+                     f"metadata")
+    return probs
+
+
+def validate_metrics_snapshot(obj) -> list:
+    """Problems with a Registry.snapshot() dict ([] == valid)."""
+    probs = []
+    if not isinstance(obj, dict):
+        return ["snapshot must be an object"]
+    for kind in ("counters", "gauges", "histograms"):
+        if kind not in obj or not isinstance(obj[kind], dict):
+            probs.append(f"missing {kind!r} section")
+    for name, series in obj.get("counters", {}).items():
+        for labels, v in series.items():
+            if not isinstance(v, (int, float)) or v < 0:
+                probs.append(f"counter {name}{labels}: {v!r} not >= 0")
+    for name, series in obj.get("gauges", {}).items():
+        for labels, v in series.items():
+            if not isinstance(v, (int, float)):
+                probs.append(f"gauge {name}{labels}: {v!r} not a number")
+    for name, series in obj.get("histograms", {}).items():
+        for labels, h in series.items():
+            buckets = h.get("buckets")
+            if not isinstance(buckets, dict) or "+Inf" not in buckets:
+                probs.append(f"histogram {name}{labels}: no +Inf bucket")
+                continue
+            cum = list(buckets.values())
+            if any(b > a for a, b in zip(cum[1:], cum[:-1])):
+                probs.append(f"histogram {name}{labels}: cumulative "
+                             f"bucket counts must be non-decreasing")
+            if h.get("count") != buckets["+Inf"]:
+                probs.append(f"histogram {name}{labels}: count "
+                             f"{h.get('count')} != +Inf {buckets['+Inf']}")
+    return probs
+
+
+# ---------------------------------------------------------------------------
+# minimal Prometheus exposition parser (round-trip testing)
+
+_SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^}]*)\})?\s+(?P<value>\S+)$")
+_LABEL_RE = re.compile(r'(?P<k>[a-zA-Z_][a-zA-Z0-9_]*)="(?P<v>[^"]*)"')
+
+
+def parse_prometheus_text(text: str) -> dict:
+    """Parse exposition text into ``{name: {"type": t, "samples":
+    {(sorted label items): float}}}`` (``_bucket``/``_sum``/``_count``
+    series keep their suffixed names)."""
+    out: dict = {}
+    types: dict = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        if line.startswith("# TYPE "):
+            _, _, name, kind = line.split(None, 3)
+            types[name] = kind
+            continue
+        if line.startswith("#"):
+            continue
+        m = _SAMPLE_RE.match(line)
+        if not m:
+            raise ValueError(f"unparseable sample line: {line!r}")
+        name = m.group("name")
+        labels = tuple(sorted(
+            (lm.group("k"), lm.group("v"))
+            for lm in _LABEL_RE.finditer(m.group("labels") or "")))
+        base = name
+        for suffix in ("_bucket", "_sum", "_count"):
+            if name.endswith(suffix) and name[:-len(suffix)] in types:
+                base = name[:-len(suffix)]
+                break
+        entry = out.setdefault(name, {"type": types.get(base, "untyped"),
+                                      "samples": {}})
+        entry["samples"][labels] = float(m.group("value"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="validate obs trace/metrics JSON exports")
+    ap.add_argument("trace", help="Chrome trace-event JSON path")
+    ap.add_argument("metrics", nargs="?",
+                    help="metrics snapshot JSON path (optional)")
+    args = ap.parse_args(argv)
+    with open(args.trace) as f:
+        probs = validate_chrome_trace(json.load(f))
+    for p in probs:
+        print(f"trace: {p}")
+    n_events = 0
+    with open(args.trace) as f:
+        n_events = len(json.load(f).get("traceEvents", []))
+    print(f"{args.trace}: {n_events} events, "
+          f"{'OK' if not probs else f'{len(probs)} problems'}")
+    if args.metrics:
+        with open(args.metrics) as f:
+            obj = json.load(f)
+        # the bench writes {"metrics": snapshot, ...}; accept both shapes
+        snap = obj.get("metrics", obj)
+        mp = validate_metrics_snapshot(snap)
+        for p in mp:
+            print(f"metrics: {p}")
+        print(f"{args.metrics}: "
+              f"{'OK' if not mp else f'{len(mp)} problems'}")
+        probs += mp
+    return 1 if probs else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

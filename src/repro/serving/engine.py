@@ -50,10 +50,14 @@ import numpy as np
 
 from repro.configs.base import ATTN, ModelConfig
 from repro.core.interleave import BatchState
+from repro.core.offload import record_transfer
 from repro.core.pipeline import SpecOffloadEngine, required_cache_len
-from repro.core.planner import ParaSpecPlanner, Policy, Workload
+from repro.core.planner import (ParaSpecPlanner, Policy, Workload,
+                                kv_bytes_per_token)
+from repro.core.spec_decode import record_acceptance
 from repro.models.transformer import (admit_sequence_paged, init_cache,
                                       init_paged_cache, release_slot_paged)
+from repro.obs import bubble_report, make_obs
 from repro.serving.paged_kv import BlockAllocator, prefix_block_keys
 from repro.sim.hardware import ENV1, HardwareSpec
 
@@ -125,6 +129,16 @@ class SchedulerConfig:
     kv_quant_cold: bool = False   # int8-quantize the pool (quantize-on-
                                   # write; contiguous-int8 numerics)
     prefix_cache: bool = True     # hash-chain dedup of full prompt blocks
+    # ---- observability (repro.obs) ----
+    metrics: bool = True          # labeled counter/gauge/histogram registry
+                                  # behind ServingEngine.metrics(); cheap,
+                                  # on by default
+    trace: bool = False           # span tracer -> Chrome trace JSON +
+                                  # bubble/utilization accounting.  Off by
+                                  # default: fencing serializes dispatch to
+                                  # get honest per-phase device timing
+    trace_fence: bool = True      # block_until_ready at device-span exit
+    trace_annotations: bool = False  # jax.profiler.TraceAnnotation per span
 
 
 @dataclass
@@ -163,12 +177,17 @@ class ServingEngine:
     _queue: list = field(default_factory=list)
 
     def __post_init__(self):
-        self.engine = SpecOffloadEngine(self.target_cfg, self.draft_cfg,
-                                        self.hw)
         if self.config is None:
             self.config = SchedulerConfig(max_batch=self.batch_size,
                                           n_cand=self.n_cand,
                                           eos_id=self.eos_id)
+        self.obs = make_obs(trace=self.config.trace,
+                            metrics=self.config.metrics,
+                            fence=self.config.trace_fence,
+                            annotations=self.config.trace_annotations,
+                            virtual_clock=lambda: self._now)
+        self.engine = SpecOffloadEngine(self.target_cfg, self.draft_cfg,
+                                        self.hw, obs=self.obs)
         self._splice = jax.jit(_splice_slot)
         self._admit_paged = jax.jit(admit_sequence_paged,
                                     static_argnums=(0,))
@@ -263,7 +282,8 @@ class ServingEngine:
                     target_cache=tc, draft_cache=dc,
                     t_next=jnp.zeros((cfg.max_batch,), jnp.int32),
                     drafts=None, draft_pendings=None, emitted=[]))
-            self._allocs = [BlockAllocator(nb) for _ in range(2)]
+            self._allocs = [BlockAllocator(nb, obs=self.obs, name=f"h{h}")
+                            for h in range(2)]
         else:
             # Park a 1-token dummy sequence in every slot: shapes are fixed
             # forever, real requests are spliced in by _admit().
@@ -340,24 +360,49 @@ class ServingEngine:
             self._queue.remove(req)
             req.admitted_s = self._now
             t_wall = time.time()
-            st = self.engine.prefill_batch(prompt[None, :], self._max_len,
-                                           cfg.prefill_chunk)
-            if cfg.paged:
-                block_ids, n_shared = grant
-                row = np.zeros(self._max_len // cfg.block_size, np.int32)
-                row[:len(block_ids)] = block_ids
-                half.target_cache = self._admit_paged(
-                    self.target_cfg, half.target_cache, st.target_cache,
-                    slot_idx, jnp.asarray(row), len(prompt), n_shared)
-                self._blocks_granted_seqs += 1
-            else:
-                half.target_cache = self._splice(half.target_cache,
-                                                 st.target_cache, slot_idx)
-            half.draft_cache = self._splice(half.draft_cache,
-                                            st.draft_cache, slot_idx)
+            with self.obs.tracer.span("admit", "admit") as asp:
+                st = self.engine.prefill_batch(prompt[None, :],
+                                               self._max_len,
+                                               cfg.prefill_chunk)
+                if cfg.paged:
+                    block_ids, n_shared = grant
+                    row = np.zeros(self._max_len // cfg.block_size,
+                                   np.int32)
+                    row[:len(block_ids)] = block_ids
+                    half.target_cache = self._admit_paged(
+                        self.target_cfg, half.target_cache,
+                        st.target_cache, slot_idx, jnp.asarray(row),
+                        len(prompt), n_shared)
+                    self._blocks_granted_seqs += 1
+                else:
+                    half.target_cache = self._splice(
+                        half.target_cache, st.target_cache, slot_idx)
+                half.draft_cache = self._splice(half.draft_cache,
+                                                st.draft_cache, slot_idx)
+                asp.fence((half.target_cache, half.draft_cache))
+                asp.set("rid", req.rid)
+                asp.set("half", h)
+                asp.set("slot", slot_idx)
             t0 = int(np.asarray(st.t_next)[0])
             half.t_next = half.t_next.at[slot_idx].set(t0)
-            self._now += time.time() - t_wall
+            dt = time.time() - t_wall
+            self._now += dt
+            if self.obs.enabled:
+                # splicing the prefilled KV into the serving cache is the
+                # engine's host->device KV hand-off (paper Table 3 P row)
+                kv_bytes = len(prompt) * (
+                    kv_bytes_per_token(self.target_cfg)
+                    + kv_bytes_per_token(self.draft_cfg))
+                record_transfer(self.obs, "h2d", kv_bytes, dt,
+                                what="kv_splice")
+                self.obs.metrics.histogram(
+                    "admit_seconds",
+                    "wall seconds per admission (prefill + splice)"
+                ).observe(dt)
+                self.obs.tracer.instant(
+                    "admit", "admitted",
+                    {"rid": req.rid, "half": h, "slot": slot_idx,
+                     "prompt_len": len(prompt)})
             req.first_token_s = self._now
             slot = slots[slot_idx]
             slot.req, slot.emitted, slot.done = req, [t0], False
@@ -379,6 +424,14 @@ class ServingEngine:
         req.finished_s = self._now
         req.latency_s = self._now - req.arrival_s
         self._tokens_out += len(req.result)
+        if self.obs.enabled:
+            self.obs.metrics.counter(
+                "serve_requests_total",
+                "requests completed by the scheduler").inc(1)
+            self.obs.tracer.instant(
+                "admit", "retired",
+                {"rid": req.rid, "half": h, "slot": idx,
+                 "tokens": len(req.result)})
         slot.req, slot.emitted, slot.done = None, [], True
         if self.config.paged and slot.blocks:
             # Null the slot's table row + pos *before* its blocks can be
@@ -436,7 +489,7 @@ class ServingEngine:
                       occupancy=max(occ, 1e-3),
                       kv_bytes_per_seq=self._kv_bytes_per_seq())
         rep = ParaSpecPlanner(self.target_cfg, self.draft_cfg,
-                              self.hw).search(wl)
+                              self.hw, obs=self.obs).search(wl)
         self.suggested_policy = rep.policy
         self._planned_occ = occ
         self.replan_events.append({"round": self._rounds, "occupancy": occ,
@@ -463,31 +516,102 @@ class ServingEngine:
             self._now = 0.0
         completed = []
         v = self._v
+        tr = self.obs.tracer
         for _ in range(max_rounds):
-            # slot surgery is legal on any half without staged drafts
-            for h in (v, 1 - v):
-                if self._halves[h].drafts is None:
-                    completed += self._admit(h)
-            if not any(not s.done for half in self._slots for s in half):
-                if not self._queue:
-                    break
-                # idle: fast-forward the clock to the next arrival
-                self._now = max(self._now,
-                                min(r.arrival_s for r in self._queue))
-                continue
-            t_wall = time.time()
-            out = self.engine.decode_round(self._halves[v],
-                                           self._halves[1 - v],
-                                           cfg.n_cand, record=False)
-            self._now += time.time() - t_wall
-            self._rounds += 1
-            self._record_occupancy()
-            completed += self._process_emissions(v, out)
-            self._maybe_replan()
-            v = 1 - v
+            # One "round" span per scheduler iteration (admit -> fused
+            # verify+draft -> retire); renamed "idle" when the engine is
+            # empty and only fast-forwards the clock, so bubble
+            # accounting never counts waiting-for-arrivals as stall.
+            with tr.span("round", "round") as rs:
+                # slot surgery is legal on any half without staged drafts
+                for h in (v, 1 - v):
+                    if self._halves[h].drafts is None:
+                        completed += self._admit(h)
+                if not any(not s.done
+                           for half in self._slots for s in half):
+                    if not self._queue:
+                        rs.rename("idle")
+                        break
+                    # idle: fast-forward the clock to the next arrival
+                    rs.rename("idle")
+                    self._now = max(self._now,
+                                    min(r.arrival_s for r in self._queue))
+                    continue
+                live_v = ([not s.done for s in self._slots[v]]
+                          if self.obs.metrics.enabled else None)
+                t_wall = time.time()
+                out = self.engine.decode_round(self._halves[v],
+                                               self._halves[1 - v],
+                                               cfg.n_cand, record=False)
+                self._now += time.time() - t_wall
+                self._rounds += 1
+                self._record_occupancy()
+                if self.obs.metrics.enabled:
+                    self._round_metrics(out, live_v)
+                completed += self._process_emissions(v, out)
+                self._maybe_replan()
+                v = 1 - v
         self._v = v
         self._wall_s += time.time() - t_run0
         return completed
+
+    # ------------------------------------------------------------------
+    # observability (repro.obs): per-round samples + snapshot export
+
+    def _round_metrics(self, out, live_v: list):
+        """Cheap per-round registry updates (metrics mode only)."""
+        reg = self.obs.metrics
+        reg.gauge("serve_queue_depth",
+                  "requests waiting for a free slot").set(len(self._queue))
+        reg.gauge("serve_occupancy",
+                  "fraction of batch slots holding live sequences").set(
+                      self._occ_window[-1] if self._occ_window
+                      else self._occ_sum / max(1, self._rounds))
+        record_acceptance(reg, out.n_accept, self.config.n_cand,
+                          live_mask=live_v)
+
+    def _sync_metrics(self):
+        """Bring scrape-time gauges/counters up to date: pipeline trace
+        counts, allocator block states, lifetime totals."""
+        reg = self.obs.metrics
+        pipe = self.engine._pipe
+        if pipe is not None:
+            pipe.export_trace_counts(reg)
+        if self._allocs is not None:
+            for a in self._allocs:
+                a.export_gauges(reg)
+        reg.gauge("serve_rounds_total", "decode rounds executed").set(
+            self._rounds)
+        reg.gauge("serve_tokens_out_total",
+                  "tokens emitted to completed requests").set(
+                      self._tokens_out)
+        reg.gauge("serve_replans_total",
+                  "online ParaSpec replans triggered").set(
+                      len(self.replan_events))
+
+    def metrics(self) -> dict:
+        """Structured observability snapshot.
+
+        ``{"metrics": <registry snapshot>}`` plus, when tracing is on,
+        ``"utilization"`` — the bubble-accounting report derived from
+        the recorded spans: per-round GPU busy fraction, total pipeline
+        stall (the paper's offload bubble), and idle time.  Use
+        ``prometheus()`` for the text exposition of the same registry.
+        """
+        self._sync_metrics()
+        rep = {"metrics": self.obs.metrics.snapshot()}
+        if self.obs.tracer.enabled:
+            rep["utilization"] = bubble_report(self.obs.tracer)
+        return rep
+
+    def prometheus(self) -> str:
+        """Prometheus text exposition of the metrics registry."""
+        self._sync_metrics()
+        return self.obs.metrics.prometheus_text()
+
+    def chrome_trace(self) -> dict:
+        """The recorded spans as Chrome trace-event JSON (Perfetto)."""
+        return self.obs.tracer.to_chrome_trace()
 
     # ------------------------------------------------------------------
     def throughput(self, done: list | None = None) -> float:

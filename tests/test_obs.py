@@ -1,0 +1,294 @@
+"""Observability subsystem: Chrome-trace schema, Prometheus round trip,
+histogram percentiles, bubble accounting, zero-cost disabled mode, and
+the metrics-path regression that a serving run reports fused == 1."""
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from repro.obs import NULL_OBS, Obs, make_obs
+from repro.obs.metrics import (NULL_REGISTRY, Registry, acceptance_buckets)
+from repro.obs.schema import (parse_prometheus_text, validate_chrome_trace,
+                              validate_metrics_snapshot)
+from repro.obs.trace import NULL_TRACER, Tracer, bubble_report
+from repro.serving.engine import SchedulerConfig, ServeRequest, ServingEngine
+
+from conftest import tiny_config, tiny_draft_config
+
+
+def _serve(trace: bool, n_req: int = 5, seed: int = 0):
+    se = ServingEngine(tiny_config(("attn",)), tiny_draft_config(),
+                       config=SchedulerConfig(max_batch=2, n_cand=2,
+                                              trace=trace))
+    se.init_from_seed(0)
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_req):
+        p = rng.integers(0, 61, int(rng.integers(5, 13))).astype(np.int32)
+        r = ServeRequest(i, p, max_new_tokens=int(rng.integers(3, 8)))
+        reqs.append(r)
+        se.submit(r)
+    done = se.run()
+    return se, reqs, done
+
+
+@pytest.fixture(scope="module")
+def traced():
+    """One trace-enabled serving run shared by the trace assertions."""
+    return _serve(trace=True)
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace-event export
+
+
+def test_chrome_trace_schema(traced):
+    se, _, done = traced
+    assert len(done) == 5
+    trace = se.chrome_trace()
+    assert validate_chrome_trace(trace) == []
+    evs = trace["traceEvents"]
+    assert any(e["ph"] == "X" for e in evs)
+    assert any(e["ph"] == "i" for e in evs)
+
+
+def test_trace_tracks_cover_pipeline_phases(traced):
+    se, _, _ = traced
+    evs = se.chrome_trace()["traceEvents"]
+    names = {e["args"]["name"] for e in evs
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    for track in ("round", "target_verify", "draft_generate", "rollback",
+                  "prefill", "admit"):
+        assert track in names, f"missing {track} track"
+
+
+def test_trace_ts_dur_sane(traced):
+    se, _, _ = traced
+    evs = [e for e in se.chrome_trace()["traceEvents"] if e["ph"] == "X"]
+    assert evs
+    for e in evs:
+        assert e["ts"] >= 0 and e["dur"] >= 0
+    # the anti-phase twins: each fused verify span has a draft mirror
+    # covering exactly the same interval
+    verify = [e for e in evs if e["name"] == "verify(fused)"]
+    draft = [e for e in evs if e["name"] == "draft(fused)"]
+    assert len(verify) == len(draft) > 0
+    for ve, de in zip(verify, draft):
+        assert ve["ts"] == pytest.approx(de["ts"], abs=1.0)
+        assert ve["dur"] == pytest.approx(de["dur"], abs=1.0)
+
+
+def test_virtual_clock_stamped(traced):
+    se, _, _ = traced
+    evs = [e for e in se.chrome_trace()["traceEvents"]
+           if e["ph"] == "X" and "args" in e]
+    stamped = [e for e in evs if "virtual_s" in e["args"]]
+    assert stamped, "spans should carry the scheduler's virtual clock"
+
+
+# ---------------------------------------------------------------------------
+# bubble accounting (the paper's utilization metric)
+
+
+def test_bubble_report_consistency(traced):
+    se, _, _ = traced
+    rep = se.metrics()
+    util = rep["utilization"]
+    assert util["rounds"] == se.stats()["rounds"]
+    assert len(util["per_round"]) == util["rounds"]
+    for r in util["per_round"]:
+        assert 0.0 <= r["busy_frac"] <= 1.0
+        assert r["busy_s"] + r["stall_s"] == pytest.approx(r["dur_s"],
+                                                           rel=1e-6)
+    assert util["busy_s"] + util["stall_s"] == pytest.approx(
+        util["wall_s"], rel=1e-6)
+    assert 0.0 < util["gpu_busy_frac"] <= 1.0
+    assert util["stall_s"] >= 0.0
+
+
+def test_tracing_does_not_retrace_fused(traced):
+    """Spans wrap the jit boundary from outside: enabling tracing must
+    not change the fused program's shapes or trigger retraces."""
+    se, _, _ = traced
+    assert se.stats()["fused_compiles"] == 1
+
+
+def test_metrics_snapshot_schema_and_contents(traced):
+    se, _, _ = traced
+    rep = se.metrics()
+    snap = rep["metrics"]
+    assert validate_metrics_snapshot(snap) == []
+    # acceptance histogram: integer buckets, measured rate in [0, 1]
+    hist = snap["histograms"]["spec_accepted_tokens"][""]
+    n_cand = se.config.n_cand
+    assert hist["count"] > 0
+    rate = hist["sum"] / (hist["count"] * n_cand)
+    assert 0.0 <= rate <= 1.0
+    # per-tier transfer accounting (admission KV splice is h2d)
+    assert snap["counters"]["transfer_bytes_total"]['{tier="h2d"}'] > 0
+    assert ('{tier="h2d"}'
+            in snap["counters"]["transfer_seconds_total"])
+    # paged-KV block gauges, all drained at end of run
+    assert snap["gauges"]["kv_blocks"]['{alloc="h0",state="used"}'] == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite regression: fused == 1 through the metrics path
+
+
+def test_fused_compiles_once_via_metrics_registry():
+    """Full serving run (default metrics-on, trace-off config) must
+    report exactly one fused trace through the counter registry."""
+    se, _, done = _serve(trace=False, n_req=4, seed=3)
+    assert len(done) == 4
+    snap = se.metrics()["metrics"]
+    ctr = snap["counters"]["pipeline_traces_total"]
+    assert ctr['{entry="fused"}'] == 1
+    assert ctr['{entry="rollback"}'] == 1
+    # trace-off mode records no spans and no utilization report
+    assert "utilization" not in se.metrics()
+    assert se.chrome_trace()["traceEvents"] == []
+
+
+# ---------------------------------------------------------------------------
+# Prometheus exposition
+
+
+def test_prometheus_round_trip():
+    reg = Registry()
+    reg.counter("req_total", "requests").inc(3, tenant="a")
+    reg.counter("req_total").inc(1, tenant="b")
+    reg.gauge("occupancy", "slots").set(0.625)
+    h = reg.histogram("acc", "accepted", buckets=acceptance_buckets(4))
+    for v in (0, 1, 1, 4, 2):
+        h.observe(v)
+    parsed = parse_prometheus_text(reg.prometheus_text())
+    assert parsed["req_total"]["type"] == "counter"
+    assert parsed["req_total"]["samples"][(("tenant", "a"),)] == 3.0
+    assert parsed["req_total"]["samples"][(("tenant", "b"),)] == 1.0
+    assert parsed["occupancy"]["samples"][()] == 0.625
+    buckets = parsed["acc_bucket"]["samples"]
+    assert buckets[(("le", "0"),)] == 1.0          # cumulative
+    assert buckets[(("le", "1"),)] == 3.0
+    assert buckets[(("le", "4"),)] == 5.0
+    assert buckets[(("le", "+Inf"),)] == 5.0
+    assert parsed["acc_sum"]["samples"][()] == 8.0
+    assert parsed["acc_count"]["samples"][()] == 5.0
+
+
+def test_prometheus_endpoint_parses(traced):
+    se, _, _ = traced
+    parsed = parse_prometheus_text(se.prometheus())
+    assert "pipeline_traces_total" in parsed
+    assert parsed["pipeline_traces_total"]["samples"][
+        (("entry", "fused"),)] == 1.0
+
+
+def test_histogram_percentiles():
+    # exact when one bucket holds one distinct value
+    reg = Registry()
+    h = reg.histogram("x", buckets=acceptance_buckets(4))
+    h.observe(2.0)
+    assert h.percentile(50) == pytest.approx(2.0)
+    # uniform stream: bucket interpolation lands within a bucket width
+    h2 = reg.histogram("u", buckets=tuple(np.linspace(0, 1, 21)))
+    vals = np.linspace(0.0, 1.0, 201)
+    for v in vals:
+        h2.observe(float(v))
+    width = 0.05
+    for p in (10, 50, 90, 99):
+        exact = float(np.percentile(vals, p))
+        assert abs(h2.percentile(p) - exact) <= width
+    assert h2.percentile(0) >= 0.0
+    assert h2.percentile(100) == pytest.approx(1.0)
+
+
+def test_registry_kind_collision_rejected():
+    reg = Registry()
+    reg.counter("x_total")
+    with pytest.raises(TypeError):
+        reg.gauge("x_total")
+
+
+# ---------------------------------------------------------------------------
+# disabled mode: zero cost, nothing allocated per round
+
+
+def _null_round(tr, reg):
+    """The per-round obs surface the engine loop touches, null-mode."""
+    with tr.span("round", "round") as sp:
+        sp.fence(None)
+        sp.set("k", 1)
+        sp.rename("idle")
+    tr.instant("admit", "admitted")
+    tr.complete("draft_generate", "d", 0.0, 1.0, cat="device")
+    reg.counter("c_total").inc(1.0, tier="h2d")
+    reg.gauge("g").set(2.0)
+    reg.histogram("h").observe(0.5)
+
+
+def test_disabled_tracing_shares_one_span():
+    s1 = NULL_TRACER.span("round", "round")
+    s2 = NULL_TRACER.span("h2d", "stream", cat="device")
+    assert s1 is s2, "disabled spans must be one shared object"
+    assert NULL_OBS.enabled is False
+
+
+def test_disabled_tracing_no_retained_allocations():
+    """Disabled-mode obs must not accumulate anything per round: after
+    thousands of null rounds, traced memory returns to baseline (an
+    enabled tracer retains events — the sensitivity check)."""
+    rounds = 5000
+    _null_round(NULL_TRACER, NULL_REGISTRY)     # warm call sites
+    tracemalloc.start()
+    base = tracemalloc.get_traced_memory()[0]
+    for _ in range(rounds):
+        _null_round(NULL_TRACER, NULL_REGISTRY)
+    grown = tracemalloc.get_traced_memory()[0] - base
+    tracemalloc.stop()
+    assert grown < 4096, f"null obs retained {grown} bytes"
+
+    live = Obs(Tracer(fence=False), Registry())
+    tracemalloc.start()
+    base = tracemalloc.get_traced_memory()[0]
+    for _ in range(rounds):
+        _null_round(live.tracer, live.metrics)
+    grown_live = tracemalloc.get_traced_memory()[0] - base
+    tracemalloc.stop()
+    assert grown_live > 100 * 1024, "sanity: live tracer retains events"
+
+
+# ---------------------------------------------------------------------------
+# bubble accounting on synthetic spans (unit-level)
+
+
+def test_bubble_union_does_not_double_count():
+    tr = Tracer(fence=False)
+    with tr.span("round", "round"):
+        with tr.span("target_verify", "v", cat="device") as sp:
+            pass
+    # mirror the same interval on the draft track (anti-phase twin)
+    tr.complete("draft_generate", "d", sp.t0, sp.t1, cat="device")
+    rep = bubble_report(tr)
+    assert rep["rounds"] == 1
+    # overlapped twins count once: busy <= round duration
+    assert rep["per_round"][0]["busy_s"] <= rep["per_round"][0]["dur_s"]
+
+
+def test_bubble_idle_rounds_excluded():
+    tr = Tracer(fence=False)
+    with tr.span("round", "idle"):
+        pass
+    with tr.span("round", "round"):
+        with tr.span("prefill", "p", cat="device"):
+            pass
+    rep = bubble_report(tr)
+    assert rep["rounds"] == 1
+    assert rep["idle_s"] >= 0.0
+
+
+def test_make_obs_modes():
+    assert make_obs(trace=False, metrics=False) is NULL_OBS
+    obs = make_obs(trace=True, metrics=False)
+    assert obs.tracer.enabled and not obs.metrics.enabled
+    assert obs.enabled
