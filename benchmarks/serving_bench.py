@@ -9,6 +9,9 @@ benchmarks/run.py: ``(name, value, derived)``.
     PYTHONPATH=src python -m benchmarks.serving_bench [--requests N]
     # paged-vs-contiguous A/B on the same trace -> BENCH_serving_paged.json
     PYTHONPATH=src python -m benchmarks.serving_bench --compare [--out F]
+    # chain-vs-tree speculation A/B at equal candidate budget
+    #   -> BENCH_serving_tree.json
+    PYTHONPATH=src python -m benchmarks.serving_bench --compare-spec
     # observability run: Perfetto trace + metrics snapshot + utilization
     # digest (paper's bubble/GPU-busy metric) -> BENCH_serving_obs.json
     PYTHONPATH=src python -m benchmarks.serving_bench \\
@@ -21,19 +24,29 @@ import numpy as np
 
 def run(rows: list, requests: int = 10, gen: int = 8, rate: float = 2.0,
         seed: int = 0, paged: bool = True, kv_quant_cold: bool = False,
-        prefix: str = "serving", trace: bool = False) -> dict:
+        prefix: str = "serving", trace: bool = False, n_cand: int = 2,
+        spec_tree: tuple | None = None, vocab: int | None = None) -> dict:
+    import dataclasses
+
     from repro.configs.base import MIXTRAL_8X7B, MISTRAL_7B
     from repro.serving.engine import (SchedulerConfig, ServingEngine,
                                       latency_percentiles)
     from repro.serving.trace import poisson_requests
 
-    tcfg = MIXTRAL_8X7B.reduced(d_model=64)
+    tcfg = MIXTRAL_8X7B.reduced(d_model=64, **({"vocab": vocab} if vocab
+                                               else {}))
     dcfg = MISTRAL_7B.reduced(d_model=32, vocab=tcfg.vocab_size)
+    if spec_tree is not None:
+        # tree speculation needs an all-attention draft; swap the SWA
+        # pattern for full attention at the same size
+        dcfg = dataclasses.replace(dcfg, layer_pattern=("attn",) * 2,
+                                   n_layers=2)
     # length_bucket pads admitted prompts to one shape so the trace
     # measures scheduler behavior, not per-length prefill compiles (the
     # benchmark doesn't assert raw-prompt losslessness)
     eng = ServingEngine(tcfg, dcfg,
-                        config=SchedulerConfig(max_batch=2, n_cand=2,
+                        config=SchedulerConfig(max_batch=2, n_cand=n_cand,
+                                               spec_tree=spec_tree,
                                                length_bucket=16,
                                                paged=paged,
                                                kv_quant_cold=kv_quant_cold,
@@ -121,6 +134,66 @@ def compare(requests: int = 10, gen: int = 8, rate: float = 2.0,
     return report
 
 
+def _accept_per_pass(eng, mode: str) -> dict:
+    """Accepted-candidates-per-target-pass from the acceptance counters:
+    emitted tokens per verify pass = accepted/rounds + 1 (the bonus)."""
+    snap = eng.metrics()["metrics"]["counters"]
+    lab = f'{{mode="{mode}"}}'
+    acc = snap.get("spec_tokens_accepted_total", {}).get(lab, 0.0)
+    waste = snap.get("spec_tokens_wasted_total", {}).get(lab, 0.0)
+    rounds = snap.get("spec_verify_rounds_total", {}).get(lab, 0.0)
+    return {"accepted_total": acc, "wasted_total": waste,
+            "verify_rounds": rounds,
+            "accepted_per_pass": acc / max(rounds, 1.0),
+            "emitted_per_pass": acc / max(rounds, 1.0) + 1.0,
+            "waste_frac": waste / max(acc + waste, 1.0)}
+
+
+def compare_spec(requests: int = 10, gen: int = 8, rate: float = 2.0,
+                 seed: int = 0, tree: tuple = (3, 2),
+                 vocab: int = 13) -> dict:
+    """Chain vs tree speculation on the *same* Poisson trace at equal
+    candidate budget (chain n_cand = tree nodes - 1).
+
+    A small vocab makes the tiny random draft/target pair agree often
+    enough that acceptance behavior is measurable; the tree's extra
+    siblings then raise the chance *some* path survives each depth, which
+    is exactly the accepted-tokens-per-target-pass gain the planner's
+    tree model predicts at low acceptance rates.
+    """
+    from repro.core.spec_decode import tree_n_nodes
+
+    budget = tree_n_nodes(tree) - 1         # candidates per verify pass
+    report: dict = {"trace": {"requests": requests, "gen": gen,
+                              "rate_rps": rate, "seed": seed,
+                              "tree": list(tree),
+                              "candidate_budget": budget,
+                              "vocab": vocab,
+                              "config": "MIXTRAL_8X7B.reduced(d_model=64)"
+                                        " / max_batch=2 x2"}}
+    for name, kw in (("chain", dict(n_cand=budget)),
+                     ("tree", dict(spec_tree=tuple(tree)))):
+        rows: list = []
+        out = run(rows, requests, gen, rate, seed, prefix=f"spec_{name}",
+                  vocab=vocab, **kw)
+        s = _summary(out)
+        s["acceptance"] = _accept_per_pass(out["engine"], name)
+        report[name] = s
+    ch = report["chain"]["acceptance"]
+    tr = report["tree"]["acceptance"]
+    report["verdict"] = {
+        "chain_accepted_per_pass": ch["accepted_per_pass"],
+        "tree_accepted_per_pass": tr["accepted_per_pass"],
+        "accepted_per_pass_ratio": tr["accepted_per_pass"]
+        / max(ch["accepted_per_pass"], 1e-9),
+        "tok_per_s_ratio": report["tree"]["tok_per_s"]
+        / max(report["chain"]["tok_per_s"], 1e-9),
+        "waste_frac_chain": ch["waste_frac"],
+        "waste_frac_tree": tr["waste_frac"],
+    }
+    return report
+
+
 def obs_run(requests: int = 10, gen: int = 8, rate: float = 2.0,
             seed: int = 0, trace_out: str | None = None,
             metrics_out: str | None = None) -> dict:
@@ -198,6 +271,13 @@ def main():
                     help="contiguous vs paged A/B on one fixed trace")
     ap.add_argument("--out", default="BENCH_serving_paged.json",
                     help="JSON report path for --compare")
+    ap.add_argument("--compare-spec", action="store_true",
+                    help="chain vs tree speculation A/B on one fixed "
+                         "trace at equal candidate budget")
+    ap.add_argument("--spec-tree", default="3,2",
+                    help="tree branching per depth for --compare-spec")
+    ap.add_argument("--spec-out", default="BENCH_serving_tree.json",
+                    help="JSON report path for --compare-spec")
     ap.add_argument("--trace-out", default=None,
                     help="write a Perfetto-loadable Chrome trace JSON "
                          "(enables the observability run)")
@@ -224,6 +304,20 @@ def main():
               f"untraced {digest['untraced_tok_per_s']:.2f}; "
               f"fused compiles (untraced) "
               f"{digest['untraced_fused_compiles']}")
+        return
+    if args.compare_spec:
+        tree = tuple(int(k) for k in args.spec_tree.split(","))
+        report = compare_spec(args.requests, args.gen, args.rate,
+                              tree=tree)
+        with open(args.spec_out, "w") as f:
+            json.dump(report, f, indent=2)
+        v = report["verdict"]
+        print(f"wrote {args.spec_out}")
+        print(f"accepted candidates per target pass: "
+              f"chain {v['chain_accepted_per_pass']:.3f} vs "
+              f"tree {v['tree_accepted_per_pass']:.3f} "
+              f"({v['accepted_per_pass_ratio']:.2f}x)")
+        print(f"tokens/s ratio (tree/chain): {v['tok_per_s_ratio']:.2f}x")
         return
     if args.compare:
         report = compare(args.requests, args.gen, args.rate)

@@ -39,8 +39,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.spec_decode import (draft_generate, greedy_acceptance,
-                                    rollback_draft)
+from repro.core.spec_decode import (draft_generate, draft_tree_generate,
+                                    greedy_acceptance, rollback_draft,
+                                    tree_commit_cache, tree_greedy_acceptance,
+                                    tree_n_nodes, tree_spec, tree_supported)
 from repro.models import model as M
 from repro.obs import NULL_OBS
 
@@ -102,6 +104,45 @@ def fused_verify_and_draft(target_params, target_cfg: ModelConfig,
     return verify_out, draft_out
 
 
+def fused_tree_verify_and_draft(target_params, target_cfg: ModelConfig,
+                                draft_params, draft_cfg: ModelConfig,
+                                verify_state: dict, draft_state: dict,
+                                branching: tuple, mesh=None):
+    """Tree-mode fused step: the target verifies batch V's speculation
+    tree (ancestor-masked, one forward over all ``n_nodes`` buffer rows)
+    while the draft expands a fresh tree for batch D — one XLA program.
+
+    verify_state: {target_cache, draft_cache, t_next, drafts} where
+    ``drafts`` is the (B, N) BFS token buffer (row 0 == t_next).  Unlike
+    the chain path there is no separate rollback call: both of batch V's
+    caches are committed by accepted-path compaction *inside* the fused
+    program (:func:`tree_commit_cache`), keeping the round at exactly one
+    dispatch per rotation.
+    """
+    branching = tuple(branching)
+    n_nodes = tree_n_nodes(branching)
+    # --- target side: verify batch V's tree
+    tlogits, tcache, _ = M.decode(
+        target_params, target_cfg, verify_state["target_cache"],
+        verify_state["drafts"], mesh, spec_tree=tree_spec(branching))
+    a, nxt, out, path_idx = tree_greedy_acceptance(
+        verify_state["drafts"], tlogits, branching)
+    tcache = tree_commit_cache(target_cfg, tcache, path_idx, a, branching)
+    vdcache = tree_commit_cache(draft_cfg, verify_state["draft_cache"],
+                                path_idx, a, branching, pos_offset=n_nodes)
+
+    # --- draft side: expand a tree for batch D (independent compute)
+    drafts, _, dcache = draft_tree_generate(
+        draft_params, draft_cfg, draft_state["draft_cache"],
+        draft_state["t_next"], branching, mesh)
+
+    verify_out = {"target_cache": tcache, "draft_cache": vdcache,
+                  "tokens": out, "n_emitted": a + 1, "t_next": nxt,
+                  "n_accept": a}
+    draft_out = {"drafts": drafts, "draft_cache": dcache}
+    return verify_out, draft_out
+
+
 class InterleavedPipeline:
     """Dual-batch rotation, drivable one round at a time.
 
@@ -113,14 +154,33 @@ class InterleavedPipeline:
     """
 
     def __init__(self, target_params, target_cfg, draft_params, draft_cfg,
-                 n_cand: int, mesh=None, obs=None):
+                 n_cand: int, mesh=None, obs=None, tree=None):
         self.tp, self.tcfg = target_params, target_cfg
         self.dp, self.dcfg = draft_params, draft_cfg
         self.n_cand = n_cand
+        self.tree = tuple(tree) if tree is not None else None
         self.mesh = mesh
         self.obs = obs if obs is not None else NULL_OBS
         self.trace_counts = {"fused": 0, "draft": 0, "rollback": 0}
         self._exported_traces = {k: 0 for k in self.trace_counts}
+        if self.tree is not None:
+            for name, cfg in (("target", target_cfg), ("draft", draft_cfg)):
+                if not tree_supported(cfg):
+                    raise ValueError(
+                        f"tree speculation requires an all-attention "
+                        f"decoder-only {name} model (layer_pattern="
+                        f"{cfg.layer_pattern!r})")
+            tree_n_nodes(self.tree)          # validates shape and node cap
+            self._fused = jax.jit(
+                self._counted("fused", fused_tree_verify_and_draft),
+                static_argnames=("target_cfg", "draft_cfg", "branching",
+                                 "mesh"))
+            self._draft_only = jax.jit(
+                self._counted("draft", draft_tree_generate),
+                static_argnames=("cfg", "branching", "mesh",
+                                 "collect_logits"))
+            self._rollback = None            # commit happens inside fused
+            return
         self._fused = jax.jit(
             self._counted("fused", fused_verify_and_draft),
             static_argnames=("target_cfg", "draft_cfg", "n_cand", "mesh"))
@@ -162,9 +222,15 @@ class InterleavedPipeline:
             return
         with self.obs.tracer.span("draft_generate", "warmup",
                                   cat="device") as sp:
-            d, _, dc, pend = self._draft_only(self.dp, self.dcfg,
-                                              state.draft_cache,
-                                              state.t_next, self.n_cand)
+            if self.tree is not None:
+                d, _, dc = self._draft_only(self.dp, self.dcfg,
+                                            state.draft_cache,
+                                            state.t_next, self.tree)
+                pend = None
+            else:
+                d, _, dc, pend = self._draft_only(self.dp, self.dcfg,
+                                                  state.draft_cache,
+                                                  state.t_next, self.n_cand)
             sp.fence(d)
         state.drafts, state.draft_cache, state.draft_pendings = d, dc, pend
 
@@ -183,6 +249,8 @@ class InterleavedPipeline:
         assert gen.drafts is None, "gen batch already holds drafts"
         vstate = {"target_cache": verify.target_cache,
                   "t_next": verify.t_next, "drafts": verify.drafts}
+        if self.tree is not None:
+            vstate["draft_cache"] = verify.draft_cache
         dstate = {"draft_cache": gen.draft_cache, "t_next": gen.t_next}
         tr = self.obs.tracer
         # The fused call is ONE XLA program doing both phases; record it
@@ -191,17 +259,24 @@ class InterleavedPipeline:
         # so device-busy time is not double counted).
         with tr.span("target_verify", "verify(fused)", cat="device") as sp:
             vout, dout = self._fused(self.tp, self.tcfg, self.dp, self.dcfg,
-                                     vstate, dstate, self.n_cand, self.mesh)
+                                     vstate, dstate,
+                                     self.tree if self.tree is not None
+                                     else self.n_cand, self.mesh)
             sp.fence((vout, dout))
         if tr.enabled:
             tr.complete("draft_generate", "draft(fused)", sp.t0, sp.t1,
                         cat="device")
-        # batch V: commit + roll its draft cache back to acceptance
         verify.target_cache = vout["target_cache"]
-        with tr.span("rollback", "rollback", cat="device") as rb:
-            verify.draft_cache = rb.fence(self._rollback(
-                self.dcfg, verify.draft_cache, verify.draft_pendings,
-                vout["n_emitted"]))
+        if self.tree is not None:
+            # batch V's draft cache was compacted to the accepted path
+            # inside the fused program — no separate rollback dispatch.
+            verify.draft_cache = vout["draft_cache"]
+        else:
+            # batch V: commit + roll its draft cache back to acceptance
+            with tr.span("rollback", "rollback", cat="device") as rb:
+                verify.draft_cache = rb.fence(self._rollback(
+                    self.dcfg, verify.draft_cache, verify.draft_pendings,
+                    vout["n_emitted"]))
         verify.t_next = vout["t_next"]
         verify.drafts, verify.draft_pendings = None, None
         out = RoundOutput(tokens=np.asarray(vout["tokens"]),
@@ -212,7 +287,7 @@ class InterleavedPipeline:
         # batch D: stash fresh drafts
         gen.drafts = dout["drafts"]
         gen.draft_cache = dout["draft_cache"]
-        gen.draft_pendings = dout["pendings"]
+        gen.draft_pendings = dout.get("pendings")
         return out
 
     def run(self, states: list, gen_len: int, max_rounds: int = 10_000):

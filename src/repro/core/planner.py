@@ -33,19 +33,24 @@ import math
 from dataclasses import dataclass, field
 
 from repro.configs.base import ModelConfig
-from repro.core.spec_decode import expected_generated
+from repro.core.spec_decode import (expected_generated,
+                                    expected_generated_tree, tree_layout,
+                                    tree_n_nodes)
 from repro.sim.hardware import HardwareSpec
 
 @dataclass(frozen=True)
 class Policy:
-    """The gray tuple of the paper's tables."""
+    """The gray tuple of the paper's tables (+ optional tree shape)."""
     bs_prefill: int
     bs_decode: int          # per interleaved batch (total = 2x)
     bs_draft: int
-    n_cand: int             # draft max new tokens
+    n_cand: int             # draft max new tokens (chain mode)
+    tree: tuple | None = None  # speculation-tree branching per depth;
+                               # None = linear chain of n_cand drafts
 
     def astuple(self):
-        return (self.bs_prefill, self.bs_decode, self.bs_draft, self.n_cand)
+        base = (self.bs_prefill, self.bs_decode, self.bs_draft, self.n_cand)
+        return base if self.tree is None else base + (self.tree,)
 
 
 @dataclass
@@ -155,6 +160,9 @@ class ParaSpecPlanner:
         cfg, dcfg, hw = self.target, self.draft, self.hw
         bs = pol.bs_decode * 2          # dual-batch rotation: total in flight
         m = pol.n_cand
+        # tokens the target forwards per verify pass: the whole flattened
+        # tree buffer in tree mode, the chain's n_cand+1 otherwise
+        n_verify = tree_n_nodes(pol.tree) if pol.tree else m + 1
         # Effective occupancy: fraction of in-flight slots holding live
         # requests.  Prefill and host-attention KV traffic are paid per
         # *live* sequence; the streamed-FFN decode round is paid per
@@ -179,7 +187,7 @@ class ParaSpecPlanner:
         ctx = wl.prompt_len + wl.gen_len / 2
         # host attention (Eq. 19): CPU attention is DRAM-bandwidth bound —
         # each round streams the whole KV working set once (plus compute)
-        attn_flops = ((m + 1) * pol.bs_decode * occ
+        attn_flops = (n_verify * pol.bs_decode * occ
                       * attn_flops_per_token(cfg, int(ctx)))
         # KV traffic per live sequence: prefer the *measured* resident
         # bytes (the serving engine's paged allocator reports its block-
@@ -193,7 +201,7 @@ class ParaSpecPlanner:
         # per-layer FFN stream vs host attention overlap (Eq. 18)
         ffn_per_layer = layer_ffn_bytes(cfg, self.bp)
         t_ffn_stream = cfg.n_layers * ffn_per_layer / hw.h2d_bw
-        t_ffn_gpu = ((m + 1) * pol.bs_decode * dense_flops_per_token(cfg)
+        t_ffn_gpu = (n_verify * pol.bs_decode * dense_flops_per_token(cfg)
                      / hw.accel_flops)
         t_target = max(t_attn_host, t_ffn_stream) + t_ffn_gpu
 
@@ -211,11 +219,24 @@ class ParaSpecPlanner:
                          d_bytes / hw.accel_mem_bw)
         t_ddecode = max(pol.bs_draft * (d_flops + d_attn) / hw.accel_flops,
                         d_bytes / hw.accel_mem_bw)
-        t_draft = math.ceil(pol.bs_decode / pol.bs_draft) * (
-            t_dprefill + (m - 1) * t_ddecode)
+        if pol.tree:
+            # one masked decode pass per tree level; level d feeds
+            # prod(branching[:d]) tokens, each either compute- or
+            # weight-bandwidth-bound like the chain's decode step
+            widths = tree_layout(tuple(pol.tree))["level_sizes"][1:]
+            t_levels = sum(
+                max(pol.bs_draft * int(w) * (d_flops + d_attn)
+                    / hw.accel_flops, d_bytes / hw.accel_mem_bw)
+                for w in widths)
+            t_draft = math.ceil(pol.bs_decode / pol.bs_draft) * (
+                t_dprefill + t_levels)
+        else:
+            t_draft = math.ceil(pol.bs_decode / pol.bs_draft) * (
+                t_dprefill + (m - 1) * t_ddecode)
 
         t_round = max(t_target, t_draft)
-        e_n = expected_generated(wl.accept_prob, m)
+        e_n = (expected_generated_tree(wl.accept_prob, tuple(pol.tree))
+               if pol.tree else expected_generated(wl.accept_prob, m))
         n_iter = math.ceil(wl.gen_len / e_n)
         # dual-batch rotation: the target pipeline serves the two
         # interleaved batches in alternating slots -> 2x n_iter slots
@@ -233,7 +254,7 @@ class ParaSpecPlanner:
                     + dcfg.param_bytes(self.bp)
                     + pol.bs_draft * (wl.prompt_len + wl.gen_len)
                     * kv_bytes_per_token(dcfg, self.bp)
-                    + self._act_bytes(pol, m))
+                    + self._act_bytes(pol, n_verify))
         feasible = (v_prefill <= hw.accel_mem_bytes
                     and v_decode <= hw.accel_mem_bytes
                     and cfg.param_bytes(self.bp) <= hw.host_mem_bytes
@@ -254,9 +275,9 @@ class ParaSpecPlanner:
                      + layer_ffn_bytes(self.target, self.bp))
         return 2 * per_layer
 
-    def _act_bytes(self, pol: Policy, m: int) -> float:
+    def _act_bytes(self, pol: Policy, n_verify: int) -> float:
         cfg = self.target
-        return 4 * (m + 1) * pol.bs_decode * cfg.d_model * 4
+        return 4 * n_verify * pol.bs_decode * cfg.d_model * 4
 
     # -- search ------------------------------------------------------------
 
@@ -300,3 +321,47 @@ class ParaSpecPlanner:
                 "ParaSpec policy searches (offline + online replans)"
             ).inc(1)
         return best
+
+    def search_spec(self, wl: Workload, tree_grid=None,
+                    node_budget: int = 16,
+                    bs_draft_grid=(4, 5, 6, 8, 10, 16),
+                    **search_kw) -> PlanReport:
+        """Joint chain-vs-tree speculation search.
+
+        Runs the chain :meth:`search` first, then re-evaluates the best
+        chain policy's batch dimensions with every tree shape in
+        ``tree_grid`` (sweeping ``bs_draft`` — tree levels shift the
+        draft's compute/bandwidth balance).  ``node_budget`` caps the
+        flattened buffer so a wide tree can't blow up the verify pass.
+        At low acceptance rates extra siblings raise the chance *some*
+        path survives each depth, so trees win; at high acceptance a deep
+        chain is optimal and the chain policy comes back unchanged.
+        """
+        if tree_grid is None:
+            tree_grid = TREE_GRID
+        best = self.search(wl, **search_kw)
+        base = best.policy
+        for tree in tree_grid:
+            tree = tuple(tree)
+            if tree_n_nodes(tree) > node_budget:
+                continue
+            for bdr in bs_draft_grid:
+                if bdr > base.bs_decode:
+                    continue
+                rep = self.evaluate(
+                    Policy(base.bs_prefill, base.bs_decode, bdr,
+                           len(tree), tree=tree), wl)
+                if rep.feasible and rep.throughput > best.throughput:
+                    best = rep
+        if self.obs.enabled and best.policy.tree is not None:
+            self.obs.tracer.instant(
+                "planner", "replan_tree",
+                {"tree": str(best.policy.tree),
+                 "bs_draft": best.policy.bs_draft,
+                 "modeled_throughput": best.throughput})
+        return best
+
+
+#: Tree shapes the online replanner considers (depth-major; every shape
+#: stays under the 31-node ancestor-bitmask cap with plenty of margin).
+TREE_GRID = ((2,), (3,), (4,), (2, 2), (3, 2), (4, 2), (2, 2, 2), (3, 3))

@@ -24,12 +24,13 @@ model's own greedy decoding, token for token (tested in
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ATTN, ModelConfig
 from repro.models import model as M
 
 # ---------------------------------------------------------------------------
@@ -66,7 +67,8 @@ def expected_generated_paper_eq12(p: float, n_cand: int) -> float:
                   - (n_cand + 1) * p ** (n_cand + 1) + 1) / (1 - p))
 
 
-def record_acceptance(metrics, n_accept, n_cand: int, live_mask=None):
+def record_acceptance(metrics, n_accept, n_cand: int, live_mask=None,
+                      n_draft: int | None = None, mode: str = "chain"):
     """Observe one verified round's per-sequence accepted-draft counts
     into the registry's acceptance histogram (host-side — call with the
     materialized ``RoundOutput.n_accept``, never inside jit).
@@ -75,6 +77,18 @@ def record_acceptance(metrics, n_accept, n_cand: int, live_mask=None):
     histogram reflects real requests only.  The histogram's integer
     buckets 0..n_cand make the paper's acceptance-rate estimate exact:
     ``sum / (count * n_cand)`` is the measured per-round acceptance.
+    For trees pass ``n_cand`` = tree depth (the max accepted path length).
+
+    ``n_draft`` is the number of candidate tokens *verified* per sequence
+    per round (chain: n_cand; tree: n_nodes - 1).  It feeds the waste
+    counters that make chain vs tree efficiency directly comparable:
+
+    * ``spec_tokens_accepted_total{mode=}`` / ``spec_tokens_wasted_total``
+      — candidate tokens the target pass kept / threw away;
+    * ``spec_verify_rounds_total`` — per-sequence verified rounds (the
+      denominator: accepted/rounds + 1 = emitted tokens per target pass);
+    * ``spec_accept_depth_total{depth=d}`` — rounds whose accepted path
+      reached at least depth d (per-depth acceptance histogram).
     """
     if not metrics.enabled:
         return
@@ -89,6 +103,25 @@ def record_acceptance(metrics, n_accept, n_cand: int, live_mask=None):
         arr = arr[_np.asarray(live_mask)]
     for v in arr.tolist():
         hist.observe(float(v))
+
+    n_draft = n_cand if n_draft is None else n_draft
+    accepted = metrics.counter(
+        "spec_tokens_accepted_total",
+        "draft candidate tokens accepted by target verification")
+    wasted = metrics.counter(
+        "spec_tokens_wasted_total",
+        "draft candidate tokens verified by the target but rejected")
+    rounds = metrics.counter(
+        "spec_verify_rounds_total",
+        "per-sequence verified speculation rounds")
+    depth_c = metrics.counter(
+        "spec_accept_depth_total",
+        "rounds whose accepted path reached at least this depth")
+    accepted.inc(float(arr.sum()), mode=mode)
+    wasted.inc(float((n_draft - arr).sum()), mode=mode)
+    rounds.inc(float(arr.size), mode=mode)
+    for d in range(1, n_cand + 1):
+        depth_c.inc(float((arr >= d).sum()), mode=mode, depth=str(d))
 
 
 # ---------------------------------------------------------------------------
@@ -255,6 +288,405 @@ def spec_round(target_params, target_cfg: ModelConfig, target_cache,
     out = jnp.where(jnp.arange(n_cand)[None, :] < a[:, None], drafts, 0)
     out = jnp.concatenate([out, jnp.zeros_like(a[:, None])], axis=1)
     out = jax.vmap(lambda row, i, t: row.at[i].set(t))(out, a, nxt)
+    return {"tokens": out, "n_emitted": a + 1, "t_next": nxt,
+            "target_cache": target_cache, "draft_cache": draft_cache,
+            "n_accept": a}
+
+
+# ---------------------------------------------------------------------------
+# speculation trees (SpecExec-style): top-k branching per depth, verified
+# in one masked target pass
+#
+# Layout: the tree is flattened breadth-first into a candidate buffer of
+# ``n_nodes`` tokens.  Node 0 is the *root* — the last committed token
+# ``t_next`` (depth 0, input only).  Level d holds prod(branching[:d])
+# nodes: every level-(d-1) node gets the draft's top-``branching[d-1]``
+# continuations as children.  Cache rows for the buffer are written at
+# *slots* ``[pos, pos + n_nodes)`` in BFS order, while each node's RoPE
+# position is the *logical* ``pos + depth`` (siblings are alternatives for
+# the same step, so they share a position but occupy distinct slots).
+# Attention inside the buffer follows the ancestor-or-self mask; committed
+# rows ``< pos`` stay fully visible.  After verification the deepest
+# accepted root-to-leaf path is compacted back to contiguous slots
+# (:func:`tree_commit_cache`) so the committed prefix never fragments.
+
+#: ancestor sets are packed into int32 bitmasks for the Pallas kernels
+MAX_TREE_NODES = 31
+
+
+@lru_cache(maxsize=None)
+def tree_layout(branching: tuple) -> dict:
+    """Static BFS layout for a ``branching`` = (k_1, .., k_D) tree.
+
+    Returns numpy arrays (constants under jit): ``n_nodes``, ``depth``
+    (n,), ``parent`` (n,) with parent[0] = 0, ``level_sizes`` /
+    ``level_offsets`` (D+1,), ``first_child`` (n,) (-1 for leaves),
+    ``anc_mask`` (n, n) bool ancestor-or-self, and ``anc_bits`` (n,)
+    int32 with bit j set iff node j is an ancestor-or-self of node i.
+    """
+    branching = tuple(int(k) for k in branching)
+    if not branching or any(k < 1 for k in branching):
+        raise ValueError(f"branching factors must be >= 1: {branching}")
+    level_sizes = [1]
+    for k in branching:
+        level_sizes.append(level_sizes[-1] * k)
+    n = sum(level_sizes)
+    if n > MAX_TREE_NODES:
+        raise ValueError(f"tree {branching} has {n} nodes; int32 ancestor "
+                         f"bitmasks cap the buffer at {MAX_TREE_NODES}")
+    offsets = np.concatenate([[0], np.cumsum(level_sizes)[:-1]])
+    depth = np.zeros(n, np.int32)
+    parent = np.zeros(n, np.int32)
+    for d in range(1, len(level_sizes)):
+        off, cnt = offsets[d], level_sizes[d]
+        depth[off:off + cnt] = d
+        parent[off:off + cnt] = offsets[d - 1] + (np.arange(cnt)
+                                                  // branching[d - 1])
+    first_child = np.full(n, -1, np.int32)
+    for d in range(len(branching)):
+        off, cnt = offsets[d], level_sizes[d]
+        first_child[off:off + cnt] = offsets[d + 1] + (np.arange(cnt)
+                                                       * branching[d])
+    anc = np.eye(n, dtype=bool)
+    for i in range(1, n):
+        anc[i] |= anc[parent[i]]
+    bits = (anc.astype(np.int64) << np.arange(n)[None, :]).sum(1)
+    return {"n_nodes": n, "branching": branching,
+            "depth": depth, "parent": parent,
+            "level_sizes": np.asarray(level_sizes, np.int32),
+            "level_offsets": np.asarray(offsets, np.int32),
+            "first_child": first_child,
+            "anc_mask": anc, "anc_bits": bits.astype(np.int32)}
+
+
+def tree_n_nodes(branching) -> int:
+    """Buffer size (root + all candidates) of a ``branching`` tree."""
+    return int(tree_layout(tuple(branching))["n_nodes"])
+
+
+def tree_supported(cfg: ModelConfig) -> bool:
+    """Tree speculation needs every layer to see the full prefix (the
+    ancestor mask subsets full causal attention): all-ATTN decoder-only
+    configs.  SWA rings, recurrent state, and cross-attention carry
+    order-dependent state that a branched buffer cannot share."""
+    return (not cfg.encoder_decoder
+            and all(kind == ATTN for kind in cfg.layer_pattern))
+
+
+def tree_spec(branching: tuple, level: int | None = None) -> dict:
+    """The ``spec_tree`` attention descriptor (static numpy constants).
+
+    ``level=None``: verify the whole buffer at once (``prev=0``).
+    ``level=d``: the draft's feed of level ``d``'s nodes after ``prev``
+    buffer rows are already written.  Keys: ``depths`` (Sq,) node depths,
+    ``prev`` rows of the buffer already in cache, ``mask`` (Sq, prev+Sq)
+    ancestor-or-self visibility over the buffer written so far, and (full
+    buffer only) ``anc_bits`` for the Pallas tree kernels.
+    """
+    lay = tree_layout(tuple(branching))
+    if level is None:
+        return {"depths": lay["depth"], "prev": 0, "mask": lay["anc_mask"],
+                "anc_bits": lay["anc_bits"]}
+    off = int(lay["level_offsets"][level])
+    cnt = int(lay["level_sizes"][level])
+    return {"depths": lay["depth"][off:off + cnt], "prev": off,
+            "mask": lay["anc_mask"][off:off + cnt, :off + cnt]}
+
+
+# ---------------------------------------------------------------------------
+# tree-shaped acceptance model (planner objective; satellite of Eq. 12)
+
+
+def acceptance_pmf_tree(p: float, branching: tuple) -> jnp.ndarray:
+    """P[n_generated = d+1] for d = 0..D on a ``branching`` tree.
+
+    Per-level coverage under i.i.d. acceptance p: the accepted node at
+    depth d-1 has k_d children, each independently acceptable with prob
+    p, so the path extends with ``q_d = 1 - (1-p)^{k_d}`` (any child
+    matches).  The emitted count is path length + 1 (bonus token).
+    """
+    branching = tuple(branching)
+    qs = [1.0 - (1.0 - p) ** k for k in branching]
+    pmf, run = [], 1.0
+    for q in qs:
+        pmf.append(run * (1.0 - q))
+        run *= q
+    pmf.append(run)
+    return jnp.asarray(pmf)
+
+
+def expected_generated_tree(p: float, branching: tuple) -> float:
+    """E[n_generated] for a tree: ``1 + sum_d prod_{j<=d} q_j`` — the tree
+    analogue of :func:`expected_generated` (chain = all k_j = 1)."""
+    if p >= 1.0:
+        return float(len(tuple(branching)) + 1)
+    e, run = 1.0, 1.0
+    for k in tuple(branching):
+        run *= 1.0 - (1.0 - p) ** k
+        e += run
+    return float(e)
+
+
+# ---------------------------------------------------------------------------
+# tree acceptance rules
+
+
+def tree_greedy_acceptance(tokens: jax.Array, target_logits: jax.Array,
+                           branching: tuple):
+    """Greedy (lossless) acceptance over a verified tree buffer.
+
+    ``tokens`` (B, N) is the BFS buffer (root = committed ``t_next`` at
+    column 0); ``target_logits`` (B, N, V) are the target's logits at
+    every node.  A node is *accepted* iff its token equals the target's
+    greedy prediction at its parent AND its parent is accepted — so the
+    accepted set is exactly the target's own greedy path through the
+    tree (top-k children are distinct, hence at most one child per level
+    matches the unique argmax).
+
+    Returns ``(n_accept (B,), next_token (B,), out_tokens (B, D+1),
+    path_idx (B, D+1))`` where ``path_idx[:, d]`` is the buffer index of
+    the accepted depth-d node (0 = root beyond the path) for
+    :func:`tree_commit_cache`.
+    """
+    lay = tree_layout(tuple(branching))
+    depth_cap = len(lay["level_sizes"]) - 1
+    b = tokens.shape[0]
+    g = jnp.argmax(target_logits, axis=-1).astype(tokens.dtype)   # (B, N)
+
+    acc_levels = [jnp.ones((b, 1), bool)]                         # root
+    for d in range(1, depth_cap + 1):
+        off = int(lay["level_offsets"][d])
+        cnt = int(lay["level_sizes"][d])
+        par = lay["parent"][off:off + cnt]
+        match = tokens[:, off:off + cnt] == g[:, par]
+        par_local = par - int(lay["level_offsets"][d - 1])
+        acc_levels.append(match & acc_levels[d - 1][:, par_local])
+
+    n_accept = sum(lvl.any(axis=1).astype(jnp.int32)
+                   for lvl in acc_levels[1:])                     # (B,)
+    path_cols = [jnp.zeros((b,), jnp.int32)]
+    out_cols = []
+    for d in range(1, depth_cap + 1):
+        off = int(lay["level_offsets"][d])
+        cnt = int(lay["level_sizes"][d])
+        lvl = acc_levels[d].astype(jnp.int32)                     # <=1 hot
+        idx = jnp.arange(off, off + cnt, dtype=jnp.int32)
+        path_cols.append((lvl * idx[None, :]).sum(axis=1))
+        out_cols.append((lvl.astype(tokens.dtype)
+                         * tokens[:, off:off + cnt]).sum(axis=1))
+    path_idx = jnp.stack(path_cols, axis=1)                       # (B, D+1)
+    best = jnp.take_along_axis(path_idx, n_accept[:, None], axis=1)[:, 0]
+    nxt = jnp.take_along_axis(g, best[:, None], axis=1)[:, 0]
+    out = jnp.stack(out_cols + [jnp.zeros((b,), tokens.dtype)], axis=1)
+    out = jax.vmap(lambda row, i, t: row.at[i].set(t))(out, n_accept, nxt)
+    return n_accept, nxt, out, path_idx
+
+
+def tree_sampled_acceptance(tokens: jax.Array, draft_logits: jax.Array,
+                            target_logits: jax.Array, branching: tuple,
+                            key, temperature: float = 1.0):
+    """SpecInfer-style multi-candidate rejection sampling down the tree.
+
+    At the current accepted node, try its k children in draft-rank order:
+    accept child c with prob ``min(1, res(c) / p_d(c))`` where ``res``
+    starts as the target distribution; on rejection subtract the draft
+    proposal mass and renormalize both (sampling-without-replacement
+    correction), and if every child is rejected emit a token from the
+    residual.  Greedy mode is the losslessness-tested path; this sampled
+    walk is distribution-sanity-tested in tests/test_tree_spec.py.
+
+    Same return signature as :func:`tree_greedy_acceptance`.
+    """
+    lay = tree_layout(tuple(branching))
+    branching = lay["branching"]
+    b, _, v = target_logits.shape
+    pt_all = jax.nn.softmax(target_logits / temperature, axis=-1)
+    pd_all = jax.nn.softmax(draft_logits / temperature, axis=-1)
+    keys = jax.random.split(key, sum(branching) + len(branching) + 1)
+    ki = 0
+
+    cur = jnp.zeros((b,), jnp.int32)          # deepest accepted node
+    alive = jnp.ones((b,), bool)              # path still extending
+    n_accept = jnp.zeros((b,), jnp.int32)
+    nxt = jnp.zeros((b,), tokens.dtype)
+    path_cols = [cur]
+    out_cols = []
+    fc_arr = jnp.asarray(lay["first_child"])
+    for d, k_d in enumerate(branching):
+        fc = fc_arr[cur]                                          # (B,)
+        res = jnp.take_along_axis(pt_all, cur[:, None, None], 1)[:, 0]
+        pdm = jnp.take_along_axis(pd_all, cur[:, None, None], 1)[:, 0]
+        accepted = jnp.zeros((b,), bool)
+        child_tok = jnp.zeros((b,), tokens.dtype)
+        child_idx = cur
+        for j in range(k_d):
+            cidx = fc + j
+            ctok = jnp.take_along_axis(tokens, cidx[:, None], 1)[:, 0]
+            ci = ctok[:, None].astype(jnp.int32)
+            p_res = jnp.take_along_axis(res, ci, 1)[:, 0]
+            p_d = jnp.take_along_axis(pdm, ci, 1)[:, 0]
+            u = jax.random.uniform(keys[ki], (b,))
+            ki += 1
+            acc_j = (alive & ~accepted
+                     & (u < jnp.minimum(1.0, p_res
+                                        / jnp.maximum(p_d, 1e-20))))
+            child_tok = jnp.where(acc_j, ctok, child_tok)
+            child_idx = jnp.where(acc_j, cidx, child_idx)
+            accepted |= acc_j
+            rej = alive & ~accepted
+            res_new = jnp.maximum(res - pdm, 0.0)
+            res_new = res_new / jnp.maximum(
+                res_new.sum(-1, keepdims=True), 1e-20)
+            res = jnp.where(rej[:, None], res_new, res)
+            pdm_new = pdm * (1.0 - jax.nn.one_hot(ctok, v, dtype=pdm.dtype))
+            pdm_new = pdm_new / jnp.maximum(
+                pdm_new.sum(-1, keepdims=True), 1e-20)
+            pdm = jnp.where(rej[:, None], pdm_new, pdm)
+        failed = alive & ~accepted
+        bonus = jax.random.categorical(keys[ki], jnp.log(res + 1e-20))
+        ki += 1
+        nxt = jnp.where(failed, bonus.astype(tokens.dtype), nxt)
+        n_accept += accepted.astype(jnp.int32)
+        alive &= accepted
+        out_cols.append(jnp.where(accepted, child_tok, 0))
+        cur = jnp.where(accepted, child_idx, cur)
+        path_cols.append(jnp.where(accepted, child_idx, 0))
+    pt_deep = jnp.take_along_axis(pt_all, cur[:, None, None], 1)[:, 0]
+    bonus = jax.random.categorical(keys[ki], jnp.log(pt_deep + 1e-20))
+    nxt = jnp.where(alive, bonus.astype(tokens.dtype), nxt)
+    out = jnp.stack(out_cols + [jnp.zeros((b,), tokens.dtype)], axis=1)
+    out = jax.vmap(lambda row, i, t: row.at[i].set(t))(out, n_accept, nxt)
+    return n_accept, nxt, out, jnp.stack(path_cols, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# tree draft generation + accepted-path commit
+
+
+def draft_tree_generate(params, cfg: ModelConfig, cache, t_next: jax.Array,
+                        branching: tuple, mesh=None,
+                        collect_logits: bool = False):
+    """Expand the draft's top-k speculation tree level by level.
+
+    Feeds the root (``t_next``) then each level's nodes in one masked
+    decode step per depth; every level-(d-1) node contributes its
+    top-``branching[d-1]`` continuations.  All ``n_nodes`` buffer rows
+    end up written to the cache (slots ``[pos, pos + n_nodes)``), so a
+    fully-accepted round needs no catch-up feed — mirroring the chain's
+    n_cand+1 protocol.  Returns ``(tok_buf (B, N), draft_logits
+    (B, N, V) | None, cache)`` with ``pos`` advanced by ``n_nodes``.
+    """
+    lay = tree_layout(tuple(branching))
+    branching = lay["branching"]
+    b = t_next.shape[0]
+    feed = t_next[:, None].astype(jnp.int32)
+    toks, dlogits = [feed], []
+    for d in range(len(branching) + 1):
+        spec = tree_spec(branching, level=d)
+        logits, cache, _ = M.decode(params, cfg, cache, feed, mesh,
+                                    spec_tree=spec)
+        cache = dict(cache, pos=cache["pos"] + feed.shape[1])
+        if collect_logits:
+            dlogits.append(logits)
+        if d < len(branching):
+            _, topk = jax.lax.top_k(logits, branching[d])  # (B, w, k)
+            feed = topk.reshape(b, -1).astype(jnp.int32)
+            toks.append(feed)
+    tok_buf = jnp.concatenate(toks, axis=1)
+    logits_buf = (jnp.concatenate(dlogits, axis=1) if collect_logits
+                  else None)
+    return tok_buf, logits_buf, cache
+
+
+def tree_commit_cache(cfg: ModelConfig, cache, path_idx: jax.Array,
+                      n_keep, branching: tuple, pos_offset: int = 0):
+    """Commit a verified tree's accepted root path by *compaction*: the
+    accepted buffer rows (root + path) are gathered from their scattered
+    BFS slots and scattered back contiguously at the frontier, then
+    ``pos`` advances past the kept rows.  Rows beyond the new ``pos``
+    are stale-but-invisible (the standing decode invariant) and get
+    overwritten by the next round's buffer.
+
+    ``path_idx`` (B, D+1) comes from the acceptance rule; ``n_keep``
+    (B,) is the accepted path length ``a`` (``a + 1`` rows kept).
+    ``pos_offset`` is how far ``cache['pos']`` already advanced past the
+    buffer start (0 for the target, whose decode does not move ``pos``;
+    ``n_nodes`` for the draft after :func:`draft_tree_generate`).
+    Supports contiguous and paged (block-table) ATTN caches.
+    """
+    from repro.models.attention import paged_row_indices
+    dplus = path_idx.shape[1]
+    nk = jnp.asarray(n_keep, jnp.int32)
+    base = cache["pos"] - pos_offset                       # (B,)
+    src = base[:, None] + path_idx                         # (B, D+1)
+    dst = base[:, None] + jnp.arange(dplus, dtype=jnp.int32)[None, :]
+    paged = "block_tables" in cache
+
+    def fix_pool(p, srows, drows):
+        nb, bs = p.shape[1], p.shape[2]
+        flat = p.reshape((p.shape[0], nb * bs) + p.shape[3:])
+        rows = flat[:, srows.reshape(-1)]
+        flat = flat.at[:, drows.reshape(-1)].set(rows)
+        return flat.reshape(p.shape)
+
+    def fix_buf(buf):
+        def one(rowbuf, s_b, d_b):     # (S, ...) per (group, batch)
+            rows = jnp.take(rowbuf, s_b, axis=0, mode="clip")
+            return rowbuf.at[d_b].set(rows, mode="drop")
+        return jax.vmap(lambda bg: jax.vmap(one)(bg, src, dst))(buf)
+
+    new_layers = []
+    for i, kind in enumerate(cfg.layer_pattern):
+        if kind != ATTN:
+            raise ValueError("tree_commit_cache requires an all-attention "
+                             f"layer pattern (layer {i} is {kind!r})")
+        leaf = cache["layers"][i]
+        if paged:
+            bs_blk = leaf["k"].shape[2]
+            srows = paged_row_indices(cache["block_tables"], src, bs_blk)
+            drows = paged_row_indices(cache["block_tables"], dst, bs_blk)
+            new_layers.append({kk: fix_pool(vv, srows, drows)
+                               for kk, vv in leaf.items()})
+        else:
+            new_layers.append({kk: fix_buf(vv) for kk, vv in leaf.items()})
+    out = dict(cache, layers=tuple(new_layers), pos=base + nk + 1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# one full tree-speculation round (jit-friendly; mirrors spec_round)
+
+
+def spec_round_tree(target_params, target_cfg: ModelConfig, target_cache,
+                    draft_params, draft_cfg: ModelConfig, draft_cache,
+                    t_next: jax.Array, branching: tuple, mesh=None,
+                    key=None, sample: bool = False):
+    """One draft-tree-then-verify round for one batch.
+
+    Same contract as :func:`spec_round` with ``tokens`` (B, D+1): the
+    accepted path's tokens then the bonus token at slot ``a``.
+    """
+    branching = tuple(branching)
+    n_nodes = tree_n_nodes(branching)
+    tok_buf, dlogits, draft_cache = draft_tree_generate(
+        draft_params, draft_cfg, draft_cache, t_next, branching, mesh,
+        collect_logits=sample)
+
+    tlogits, target_cache, _ = M.decode(
+        target_params, target_cfg, target_cache, tok_buf, mesh,
+        spec_tree=tree_spec(branching))
+
+    if sample:
+        a, nxt, out, path_idx = tree_sampled_acceptance(
+            tok_buf, dlogits, tlogits, branching, key)
+    else:
+        a, nxt, out, path_idx = tree_greedy_acceptance(tok_buf, tlogits,
+                                                       branching)
+
+    target_cache = tree_commit_cache(target_cfg, target_cache, path_idx,
+                                     a, branching)
+    draft_cache = tree_commit_cache(draft_cfg, draft_cache, path_idx,
+                                    a, branching, pos_offset=n_nodes)
     return {"tokens": out, "n_emitted": a + 1, "t_next": nxt,
             "target_cache": target_cache, "draft_cache": draft_cache,
             "n_accept": a}

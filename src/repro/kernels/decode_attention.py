@@ -28,9 +28,9 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, lens_ref, o_ref, m_scr, l_scr, acc_scr, *,
-            scale: float, block_k: int, n_kv_blocks: int, q_offset_from_len,
-            window: int | None):
+def _kernel(q_ref, k_ref, v_ref, lens_ref, anc_ref, o_ref, m_scr, l_scr,
+            acc_scr, *, scale: float, block_k: int, n_kv_blocks: int,
+            q_offset_from_len, window: int | None, tree: bool):
     ki = pl.program_id(1)
 
     @pl.when(ki == 0)
@@ -46,14 +46,25 @@ def _kernel(q_ref, k_ref, v_ref, lens_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
     length = lens_ref[0]                              # valid cache length
     k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    # q rows are (g, m) flattened; row r is token r % m, at logical
-    # position length - m + (r % m)
     m_tokens = q_offset_from_len
-    q_tok = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) % m_tokens
-    q_pos = length - m_tokens + q_tok
-    ok = (k_pos <= q_pos) & (k_pos < length)
-    if window is not None:
-        ok = ok & (k_pos > q_pos - window)
+    if tree:
+        # speculation-tree verify: the last m_tokens cache rows hold the
+        # BFS buffer; row r's visibility over them is its int32 ancestor
+        # bitmask (bit j = buffer row j is an ancestor-or-self).  No
+        # gathers — a shift + AND per (q row, k position).
+        anc = anc_ref[...]                            # (gm, 1) int32
+        spec0 = length - m_tokens                     # buffer start
+        col = k_pos - spec0
+        bit = jnp.right_shift(anc, jnp.clip(col, 0, 31)) & 1
+        ok = (k_pos < spec0) | ((col >= 0) & (k_pos < length) & (bit > 0))
+    else:
+        # q rows are (g, m) flattened; row r is token r % m, at logical
+        # position length - m + (r % m)
+        q_tok = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) % m_tokens
+        q_pos = length - m_tokens + q_tok
+        ok = (k_pos <= q_pos) & (k_pos < length)
+        if window is not None:
+            ok = ok & (k_pos > q_pos - window)
     s = jnp.where(ok, s, NEG_INF)
 
     m_prev, l_prev = m_scr[...], l_scr[...]
@@ -76,18 +87,24 @@ def _kernel(q_ref, k_ref, v_ref, lens_ref, o_ref, m_scr, l_scr, acc_scr, *,
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      lengths: jax.Array, *, scale: float | None = None,
                      window: int | None = None, block_k: int = 256,
+                     anc_bits: jax.Array | None = None,
                      interpret: bool = False) -> jax.Array:
     """Verify-attention against a cache.
 
     q (B, Hq, m, d) — the m new tokens (already written into the cache at
     positions [len-m, len)); k/v (B, Hkv, S, d) cache; lengths (B,) valid
-    cache length per sequence (= pos + m).  Causal within the m new tokens.
-    Returns (B, Hq, m, d).
+    cache length per sequence (= pos + m).  Causal within the m new tokens,
+    unless ``anc_bits`` (m,) int32 marks them as a speculation-tree buffer:
+    token i then attends committed rows plus buffer rows j with bit j of
+    ``anc_bits[i]`` set (its ancestors-or-self).  Returns (B, Hq, m, d).
     """
     b, hq, m, d = q.shape
     hkv, skv = k.shape[1], k.shape[2]
     g = hq // hkv
     scale = d ** -0.5 if scale is None else scale
+    tree = anc_bits is not None
+    if tree and window is not None:
+        raise ValueError("tree masking requires full attention")
 
     skv_p = math.ceil(skv / block_k) * block_k
     if skv_p != skv:
@@ -100,10 +117,14 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     kf = k.reshape(b * hkv, skv_p, d)
     vf = v.reshape(b * hkv, skv_p, d)
     lens = jnp.repeat(lengths.astype(jnp.int32), hkv)
+    if tree:  # per-q-row bitmask, repeated across the g heads of the tile
+        anc = jnp.tile(anc_bits.astype(jnp.int32), g)[:, None]  # (gm, 1)
+    else:
+        anc = jnp.zeros((1, 1), jnp.int32)
 
     kernel = functools.partial(
         _kernel, scale=scale, block_k=block_k, n_kv_blocks=nk,
-        q_offset_from_len=m, window=window)
+        q_offset_from_len=m, window=window, tree=tree)
 
     out = pl.pallas_call(
         kernel,
@@ -114,6 +135,7 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
             pl.BlockSpec((1, block_k, d), lambda bh, ki: (bh, ki, 0)),
             pl.BlockSpec((1,), lambda bh, ki: (bh,),
                          memory_space=pltpu.SMEM),
+            pl.BlockSpec(anc.shape, lambda bh, ki: (0, 0)),
         ],
         out_specs=pl.BlockSpec((1, g * m, d), lambda bh, ki: (bh, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b * hkv, g * m, d), q.dtype),
@@ -123,7 +145,7 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
             pltpu.VMEM((g * m, d), jnp.float32),
         ],
         interpret=interpret,
-    )(qf, kf, vf, lens)
+    )(qf, kf, vf, lens, anc)
     return out.reshape(b, hkv, g, m, d).reshape(b, hq, m, d)
 
 
@@ -132,9 +154,9 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 def _paged_kernel(bt_ref, lens_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
-                  o_ref, m_scr, l_scr, acc_scr, *, scale: float,
+                  anc_ref, o_ref, m_scr, l_scr, acc_scr, *, scale: float,
                   block_size: int, n_log_blocks: int, m_tokens: int,
-                  quant: bool):
+                  quant: bool, tree: bool):
     """One (sequence, kv-head, logical-block) program.
 
     The physical block was already selected by the scalar-prefetch index
@@ -159,9 +181,18 @@ def _paged_kernel(bt_ref, lens_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
 
     length = lens_ref[pl.program_id(0)]               # valid tokens (= pos+m)
     k_pos = j * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    q_tok = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) % m_tokens
-    q_pos = length - m_tokens + q_tok
-    ok = (k_pos <= q_pos) & (k_pos < length)
+    if tree:
+        # ancestor-bitmask masking of the BFS buffer (last m_tokens rows);
+        # see _kernel
+        anc = anc_ref[...]                            # (gm, 1) int32
+        spec0 = length - m_tokens
+        col = k_pos - spec0
+        bit = jnp.right_shift(anc, jnp.clip(col, 0, 31)) & 1
+        ok = (k_pos < spec0) | ((col >= 0) & (k_pos < length) & (bit > 0))
+    else:
+        q_tok = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) % m_tokens
+        q_pos = length - m_tokens + q_tok
+        ok = (k_pos <= q_pos) & (k_pos < length)
     s = jnp.where(ok, s, NEG_INF)
 
     m_prev, l_prev = m_scr[...], l_scr[...]
@@ -185,6 +216,7 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
                            k_scale: jax.Array | None = None,
                            v_scale: jax.Array | None = None,
                            scale: float | None = None,
+                           anc_bits: jax.Array | None = None,
                            interpret: bool = False) -> jax.Array:
     """Verify-attention against a paged (block-pool) cache.
 
@@ -195,7 +227,9 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
     (entries past the sequence's allocation may be 0/-1 — they are never
     attended because positions >= ``lengths`` are masked); lengths (B,)
     valid tokens per sequence (= pos + m).  Full causal attention (no
-    sliding-window support — ring layers stay unpaged by design).
+    sliding-window support — ring layers stay unpaged by design), unless
+    ``anc_bits`` (m,) int32 marks the m tokens as a speculation-tree
+    buffer (per-row ancestor bitmasks; see :func:`decode_attention`).
     Returns (B, Hq, m, d).
     """
     b, hq, m, d = q.shape
@@ -204,6 +238,7 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
     g = hq // hkv
     scale = d ** -0.5 if scale is None else scale
     quant = k_scale is not None
+    tree = anc_bits is not None
 
     # one q tile per (sequence, kv head) — rows (g, m)-flattened as in the
     # contiguous kernel; pools head-major so tiles are (block, head, bs, d)
@@ -218,6 +253,10 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
     else:  # dummy (1,..) operands keep one kernel signature
         ksp = jnp.zeros((1, hkv, bs, 1), jnp.float32)
         vsp = jnp.zeros((1, hkv, bs, 1), jnp.float32)
+    if tree:  # per-q-row bitmask, repeated across the g heads of the tile
+        anc = jnp.tile(anc_bits.astype(jnp.int32), g)[:, None]  # (gm, 1)
+    else:
+        anc = jnp.zeros((1, 1), jnp.int32)
 
     def q_map(bi, h, j, bt_ref, lens_ref):
         return (bi, h, 0, 0)
@@ -230,9 +269,12 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
             return (bt_ref[bi, j], h, 0, 0)
         return (0, h, 0, 0)
 
+    def anc_map(bi, h, j, bt_ref, lens_ref):
+        return (0, 0)
+
     kernel = functools.partial(
         _paged_kernel, scale=scale, block_size=bs, n_log_blocks=mbs,
-        m_tokens=m, quant=quant)
+        m_tokens=m, quant=quant, tree=tree)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -243,6 +285,7 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
             pl.BlockSpec((1, 1, bs, d), kv_map),
             pl.BlockSpec((1, 1, bs, 1), sc_map),
             pl.BlockSpec((1, 1, bs, 1), sc_map),
+            pl.BlockSpec(anc.shape, anc_map),
         ],
         out_specs=pl.BlockSpec((1, 1, g * m, d), q_map),
         scratch_shapes=[
@@ -256,5 +299,5 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, g * m, d), q.dtype),
         interpret=interpret,
-    )(bt, lens, qf, kp, vp, ksp, vsp)
+    )(bt, lens, qf, kp, vp, ksp, vsp, anc)
     return out.reshape(b, hkv, g, m, d).reshape(b, hq, m, d)

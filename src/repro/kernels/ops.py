@@ -29,20 +29,22 @@ def flash_attention(q, k, v, *, scale=None, causal=True, window=None,
 
 @partial(jax.jit, static_argnames=("scale", "window", "block_k", "interpret"))
 def decode_attention(q, k, v, lengths, *, scale=None, window=None,
-                     block_k=256, interpret=None):
+                     block_k=256, anc_bits=None, interpret=None):
     interpret = INTERPRET if interpret is None else interpret
     return _da.decode_attention(q, k, v, lengths, scale=scale, window=window,
-                                block_k=block_k, interpret=interpret)
+                                block_k=block_k, anc_bits=anc_bits,
+                                interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("scale", "interpret"))
 def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
                            k_scale=None, v_scale=None, scale=None,
-                           interpret=None):
+                           anc_bits=None, interpret=None):
     interpret = INTERPRET if interpret is None else interpret
     return _da.paged_decode_attention(
         q, k_pool, v_pool, block_tables, lengths, k_scale=k_scale,
-        v_scale=v_scale, scale=scale, interpret=interpret)
+        v_scale=v_scale, scale=scale, anc_bits=anc_bits,
+        interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("activation", "block_c", "block_f",

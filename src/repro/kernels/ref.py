@@ -33,21 +33,33 @@ def flash_attention_ref(q, k, v, *, scale=None, causal=True, window=None):
     return o.reshape(b, hq, sq, d).astype(q.dtype)
 
 
-def decode_attention_ref(q, k, v, lengths, *, scale=None, window=None):
+def decode_attention_ref(q, k, v, lengths, *, scale=None, window=None,
+                         anc_mask=None):
     """q (B,Hq,m,d); k/v (B,Hkv,S,d); lengths (B,). Causal over the m new
-    tokens at positions [len-m, len)."""
+    tokens at positions [len-m, len) — or, when ``anc_mask`` (m, m) bool
+    is given, ancestor-or-self tree masking of the m-row speculation
+    buffer (committed rows < len-m stay fully visible)."""
     b, hq, m, d = q.shape
     hkv, skv = k.shape[1], k.shape[2]
     g = hq // hkv
     scale = d ** -0.5 if scale is None else scale
     qg = q.reshape(b, hkv, g, m, d).astype(jnp.float32)
     s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32)) * scale
-    kp = jnp.arange(skv)[None, None, :]
-    qp = (lengths[:, None, None] - m
-          + jnp.arange(m)[None, :, None])            # (B, m, 1)
-    ok = (kp <= qp) & (kp < lengths[:, None, None])
-    if window is not None:
-        ok &= kp > qp - window
+    if anc_mask is not None:
+        assert window is None, "tree masking requires full attention"
+        am = jnp.asarray(anc_mask)
+        kp2 = jnp.arange(skv)[None, :]
+        col = kp2 - (lengths[:, None] - m)            # (B, S)
+        allowed = jnp.transpose(am[:, jnp.clip(col, 0, m - 1)], (1, 0, 2))
+        ok = ((col < 0)[:, None, :]
+              | (((col >= 0) & (col < m))[:, None, :] & allowed))
+    else:
+        kp = jnp.arange(skv)[None, None, :]
+        qp = (lengths[:, None, None] - m
+              + jnp.arange(m)[None, :, None])        # (B, m, 1)
+        ok = (kp <= qp) & (kp < lengths[:, None, None])
+        if window is not None:
+            ok &= kp > qp - window
     s = jnp.where(ok[:, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
@@ -80,14 +92,16 @@ def gather_paged_kv_ref(k_pool, v_pool, block_tables, *, k_scale=None,
 
 
 def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
-                               k_scale=None, v_scale=None, scale=None):
+                               k_scale=None, v_scale=None, scale=None,
+                               anc_mask=None):
     """Oracle for the paged kernel: gather, then contiguous decode ref."""
     k, v = gather_paged_kv_ref(k_pool, v_pool, block_tables,
                                k_scale=k_scale, v_scale=v_scale,
                                dtype=jnp.float32)
     return decode_attention_ref(q, jnp.swapaxes(k, 1, 2),
                                 jnp.swapaxes(v, 1, 2), lengths,
-                                scale=scale).astype(q.dtype)
+                                scale=scale,
+                                anc_mask=anc_mask).astype(q.dtype)
 
 
 def moe_ffn_ref(buf, w_gate, w_up, w_down, *, activation="swiglu"):

@@ -23,6 +23,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.models.layers import (apply_rope, dense_init, rope_table,
@@ -90,6 +91,25 @@ def attention_mask(q_positions: jax.Array, kv_positions: jax.Array,
         ok = ok & (kp <= qp)
     if window is not None:
         ok = ok & (kp > qp - window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _tree_decode_mask(base: jax.Array, tree_mask, n_kv: int) -> jax.Array:
+    """Additive (B, Sq, n_kv) mask for one tree-speculation decode step.
+
+    ``base`` (B,) is where the speculation buffer starts in the cache;
+    ``tree_mask`` (Sq, W) is the static ancestor-or-self visibility of
+    the Sq fed nodes over the W buffer rows written so far.  Committed
+    rows (< base) stay fully visible, buffer rows [base, base+W) follow
+    the tree mask, and stale rows past the buffer are hidden.
+    """
+    tm = jnp.asarray(np.asarray(tree_mask))
+    w = tm.shape[1]
+    kv_idx = jnp.arange(n_kv, dtype=jnp.int32)[None, :]
+    col = kv_idx - base[:, None]                            # (B, n_kv)
+    allowed = jnp.transpose(tm[:, jnp.clip(col, 0, w - 1)], (1, 0, 2))
+    ok = (col < 0)[:, None, :] | (((col >= 0) & (col < w))[:, None, :]
+                                  & allowed)
     return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
 
 
@@ -507,7 +527,8 @@ def apply_attention(params: dict, x: jax.Array, *,
                     cache: dict | None = None, pos=0,
                     phase: str = "prefill",
                     block_tables: jax.Array | None = None,
-                    kv_chunk: int = 0) -> tuple:
+                    kv_chunk: int = 0,
+                    spec_tree: dict | None = None) -> tuple:
     """One attention layer.
 
     phase="prefill"/"train": x is the full sequence; if ``cache`` is given it
@@ -515,6 +536,13 @@ def apply_attention(params: dict, x: jax.Array, *,
     at logical positions [pos, pos+Sq); the cache is updated and attended.
     When ``block_tables`` is given (decode only), ``cache`` is a shared
     block *pool* and reads/writes are block-table indirect (paged KV).
+
+    ``spec_tree`` (decode only) marks x as speculation-*tree* nodes: cache
+    slots stay sequential but each node's RoPE position is ``pos - prev +
+    depth`` (siblings are alternatives for the same step) and visibility
+    inside the buffer follows the static ancestor mask (see
+    :func:`repro.core.spec_decode.tree_spec`).  Requires full attention
+    (``window`` must be None).
 
     Returns (out, new_cache).
     """
@@ -533,6 +561,19 @@ def apply_attention(params: dict, x: jax.Array, *,
         q_positions = pos_arr[:, None] + jnp.arange(sq, dtype=jnp.int32)
     else:
         q_positions = pos_arr + jnp.arange(sq, dtype=jnp.int32)
+    tree = spec_tree is not None and phase == "decode"
+    if tree:
+        if window is not None:
+            raise ValueError("tree speculation needs full attention: a "
+                             "sliding-window ring cannot hold a branched "
+                             "buffer")
+        t_prev = int(spec_tree["prev"])
+        t_mask = np.asarray(spec_tree["mask"])
+        t_depths = jnp.asarray(np.asarray(spec_tree["depths"]), jnp.int32)
+        t_base = jnp.broadcast_to(pos_arr, (b,)) - t_prev
+        # logical position = committed length + depth; the cache *slot*
+        # stays the sequential [pos, pos+Sq) buffer order
+        q_positions = t_base[:, None] + t_depths[None, :]
     if use_rope:
         sin, cos = rope_table(q_positions, head_dim, rope_theta)
         q = apply_rope(q, sin, cos)
@@ -582,18 +623,26 @@ def apply_attention(params: dict, x: jax.Array, *,
         # ring (SWA) layers are window-bounded and stay per-slot.
         assert cache is not None and window is None
         new_cache = paged_write(cache, k, v, block_tables, pos_arr)
-        if _use_paged_kernel():
+        if _use_paged_kernel() and (not tree or t_prev == 0):
             from repro.kernels import ops as kernel_ops
+            # full-buffer tree verify (prev == 0): the kernel masks the
+            # last Sq rows with per-node int32 ancestor bitmasks
+            anc = (jnp.asarray(np.asarray(spec_tree["anc_bits"]))
+                   if tree else None)
             out = kernel_ops.paged_decode_attention(
                 q.transpose(0, 2, 1, 3), new_cache["k"], new_cache["v"],
-                block_tables, pos_arr + sq,
+                block_tables, jnp.broadcast_to(pos_arr, (b,)) + sq,
                 k_scale=new_cache.get("k_scale"),
-                v_scale=new_cache.get("v_scale"), scale=scale)
+                v_scale=new_cache.get("v_scale"), scale=scale,
+                anc_bits=anc)
             out = out.transpose(0, 2, 1, 3).reshape(b, sq, -1)
         else:
             k_read, v_read = paged_gather(new_cache, block_tables, q.dtype)
-            kv_positions = jnp.arange(k_read.shape[1], dtype=jnp.int32)
-            mask = attention_mask(q_positions, kv_positions, None)
+            if tree:
+                mask = _tree_decode_mask(t_base, t_mask, k_read.shape[1])
+            else:
+                kv_positions = jnp.arange(k_read.shape[1], dtype=jnp.int32)
+                mask = attention_mask(q_positions, kv_positions, None)
             out = attention_direct(q, k_read, v_read, mask, scale)
     elif phase == "decode":
         assert cache is not None
@@ -638,11 +687,15 @@ def apply_attention(params: dict, x: jax.Array, *,
                 k_read = new_cache["k"].astype(q.dtype)
                 v_read = new_cache["v"].astype(q.dtype)
             length = pos_arr + sq
-            if ring:
-                kv_positions = ring_slot_positions(n_slots, length, n_slots)
+            if tree:
+                mask = _tree_decode_mask(t_base, t_mask, n_slots)
             else:
-                kv_positions = jnp.arange(n_slots, dtype=jnp.int32)
-            mask = attention_mask(q_positions, kv_positions, window)
+                if ring:
+                    kv_positions = ring_slot_positions(n_slots, length,
+                                                       n_slots)
+                else:
+                    kv_positions = jnp.arange(n_slots, dtype=jnp.int32)
+                mask = attention_mask(q_positions, kv_positions, window)
             out = attention_direct(q, k_read, v_read, mask, scale)
     else:
         raise ValueError(phase)

@@ -136,16 +136,20 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, cache: dict,
 
 
 def decode(params: dict, cfg: ModelConfig, cache: dict, tokens: jax.Array,
-           mesh=None):
+           mesh=None, spec_tree: dict | None = None):
     """Decode/verify ``m`` new tokens (B, m) at positions cache['pos'].
 
     Writes the cache eagerly and returns (logits (B,m,V), cache, pendings);
     call :func:`commit` with the number of accepted tokens to finalize.
     For plain autoregressive decoding use m=1 then ``commit(..., n=1)``.
+    ``spec_tree`` marks ``tokens`` as speculation-tree nodes (depth-based
+    positions + ancestor masking; see
+    :func:`repro.core.spec_decode.tree_spec`).
     """
     x = _embed(params, cfg, tokens)
     h, new_cache, pendings = forward_decoder(params, cfg, x, phase="decode",
-                                             cache=cache, mesh=mesh)
+                                             cache=cache, mesh=mesh,
+                                             spec_tree=spec_tree)
     return logits_from_hidden(params, cfg, h), new_cache, pendings
 
 

@@ -122,7 +122,8 @@ def layer_specs(cfg: ModelConfig, kind: str, model_size: int,
 def apply_layer(params: dict, cfg: ModelConfig, kind: str, x: jax.Array,
                 cache: dict | None, pos, phase: str, mesh=None,
                 enc_out: jax.Array | None = None, use_moe: bool = False,
-                block_tables: jax.Array | None = None):
+                block_tables: jax.Array | None = None,
+                spec_tree: dict | None = None):
     """Returns (x, new_cache, pending)."""
     nf = _norm_fn(cfg)
     pending = {}
@@ -153,7 +154,8 @@ def apply_layer(params: dict, cfg: ModelConfig, kind: str, x: jax.Array,
             head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
             use_rope=cfg.use_rope, window=window,
             cache=self_cache, pos=pos, phase=phase,
-            block_tables=block_tables if kind == ATTN else None)
+            block_tables=block_tables if kind == ATTN else None,
+            spec_tree=spec_tree)
         x = x + out
         if phase == "decode":
             # Weight-stationary decode (§Perf hillclimb #2): the token
@@ -453,11 +455,15 @@ def decoder_param_specs(cfg: ModelConfig, model_size: int = 16) -> dict:
 
 def forward_decoder(params: dict, cfg: ModelConfig, x: jax.Array, *,
                     phase: str, cache: dict | None = None, mesh=None,
-                    enc_out: jax.Array | None = None):
+                    enc_out: jax.Array | None = None,
+                    spec_tree: dict | None = None):
     """Run the stacked decoder over embedded inputs x (B, S, D).
 
     Returns (hidden, new_cache, pendings).  ``enc_out`` is the encoder
     output for encoder-decoder configs (closed over by every layer).
+    ``spec_tree`` (decode only) marks x as a speculation-tree buffer —
+    static numpy constants closed over by every layer; see
+    :func:`repro.models.attention.apply_attention`.
     """
     pos = cache["pos"] if (cache is not None and phase == "decode") else 0
     layer_caches = cache["layers"] if cache is not None else None
@@ -476,7 +482,8 @@ def forward_decoder(params: dict, cfg: ModelConfig, x: jax.Array, *,
             x, nc, pend = apply_layer(gparams[i], cfg, kind, x, gcache[i],
                                       pos, phase, mesh, enc_out=enc_out,
                                       use_moe=moe_i,
-                                      block_tables=block_tables)
+                                      block_tables=block_tables,
+                                      spec_tree=spec_tree)
             new_caches.append(nc)
             pendings.append(pend)
         return x, tuple(new_caches), tuple(pendings)

@@ -54,7 +54,8 @@ from repro.core.offload import record_transfer
 from repro.core.pipeline import SpecOffloadEngine, required_cache_len
 from repro.core.planner import (ParaSpecPlanner, Policy, Workload,
                                 kv_bytes_per_token)
-from repro.core.spec_decode import record_acceptance
+from repro.core.spec_decode import (record_acceptance, tree_n_nodes,
+                                    tree_supported)
 from repro.models.transformer import (admit_sequence_paged, init_cache,
                                       init_paged_cache, release_slot_paged)
 from repro.obs import bubble_report, make_obs
@@ -100,7 +101,11 @@ class ServeRequest:
 class SchedulerConfig:
     """Continuous-batching knobs (see module docstring)."""
     max_batch: int = 8            # slots per interleaved half (total 2x)
-    n_cand: int = 4               # draft candidates per round
+    n_cand: int = 4               # draft candidates per round (chain mode)
+    spec_tree: tuple | None = None  # speculation-tree branching per depth
+                                  # (e.g. (3, 2)); None keeps the linear
+                                  # chain of n_cand drafts.  Requires all-
+                                  # attention target AND draft models.
     eos_id: int = -1              # -1: never stop early
     admission: str = "fifo"       # "fifo" | "sjf" (shortest job first)
     length_bucket: int | None = None   # left-pad admitted prompts up to a
@@ -117,6 +122,10 @@ class SchedulerConfig:
     prefill_chunk: int = 8        # zig-zag microbatch size on admission
     replan_threshold: float | None = None  # occupancy drift that triggers
                                   # an online ParaSpec re-search (None: off)
+    replan_accept_drift: float | None = None  # measured-acceptance drift
+                                  # (per-depth fraction, EMA over live
+                                  # slots) that triggers a chain-vs-tree
+                                  # budget re-search (None: off)
     replan_interval: int = 32     # rounds between drift checks
     # ---- paged KV substrate (target full-attention layers only) ----
     paged: bool = True            # block-table pool instead of per-slot
@@ -148,6 +157,9 @@ class _Slot:
     emitted: list = field(default_factory=list)
     done: bool = True             # True: free (or holding a retired seq)
     blocks: list = field(default_factory=list)  # granted KV blocks (paged)
+    accept_ema: float = 0.7       # EMA of this sequence's per-round
+                                  # acceptance fraction (accepted depth /
+                                  # depth budget); feeds replanning
 
 
 def latency_percentiles(done: list, attr: str = "latency_s",
@@ -181,6 +193,16 @@ class ServingEngine:
             self.config = SchedulerConfig(max_batch=self.batch_size,
                                           n_cand=self.n_cand,
                                           eos_id=self.eos_id)
+        if self.config.spec_tree is not None:
+            self.config.spec_tree = tuple(self.config.spec_tree)
+            for name, cfg in (("target", self.target_cfg),
+                              ("draft", self.draft_cfg)):
+                if not tree_supported(cfg):
+                    raise ValueError(
+                        f"spec_tree requires an all-attention decoder-only "
+                        f"{name} model (layer_pattern="
+                        f"{cfg.layer_pattern!r})")
+            tree_n_nodes(self.config.spec_tree)   # validates the node cap
         self.obs = make_obs(trace=self.config.trace,
                             metrics=self.config.metrics,
                             fence=self.config.trace_fence,
@@ -206,9 +228,12 @@ class ServingEngine:
         self._occ_sum = 0.0
         self._occ_window = []
         self._planned_occ = 1.0
+        self._accept_window = []
+        self._planned_accept = 0.7    # planner's accept_prob default
         self._len_sum, self._gen_sum, self._req_seen = 0, 0, 0
         self.replan_events = []
         self.suggested_policy: Policy | None = None
+        self.suggested_tree: tuple | None = None
 
     # ------------------------------------------------------------------
     def load(self, target_params, draft_params):
@@ -237,13 +262,28 @@ class ServingEngine:
     def pending(self) -> int:
         return len(self._queue)
 
+    def _cand_equiv(self) -> int:
+        """Per-round uncommitted-token budget for cache sizing: tree mode
+        stages the whole flattened buffer (n_nodes rows, root included),
+        chain mode n_cand drafts + the root."""
+        if self.config.spec_tree is not None:
+            return tree_n_nodes(self.config.spec_tree) - 1
+        return self.config.n_cand
+
+    def _depth_cap(self) -> int:
+        """Max accepted draft tokens per verify round (the deepest
+        root-to-leaf path in tree mode, n_cand in chain mode)."""
+        if self.config.spec_tree is not None:
+            return len(self.config.spec_tree)
+        return self.config.n_cand
+
     def _required_len(self, req: ServeRequest) -> int:
         l = len(req.prompt)
         if self.config.length_bucket:
             b = self.config.length_bucket
             l = -(-l // b) * b
         return required_cache_len(l, req.max_new_tokens,
-                                  self.config.n_cand)
+                                  self._cand_equiv())
 
     def _required_blocks(self, req: ServeRequest) -> int:
         return -(-self._required_len(req) // self.config.block_size)
@@ -311,7 +351,7 @@ class ServingEngine:
         cfg = self.config
         alloc = self._allocs[h]
         need = required_cache_len(len(prompt), req.max_new_tokens,
-                                  cfg.n_cand)
+                                  self._cand_equiv())
         n_need = -(-need // cfg.block_size)
         keys = (prefix_block_keys(prompt, cfg.block_size)
                 if cfg.prefix_cache else [])
@@ -472,28 +512,61 @@ class ServingEngine:
         self._occ_sum += occ
         self._occ_window.append(occ)
 
+    def _record_acceptance_ema(self, v: int, out):
+        """Fold this round's per-slot acceptance fraction into each live
+        sequence's EMA and log the live-slot mean for drift checks."""
+        cap = self._depth_cap()
+        fracs = []
+        for idx, slot in enumerate(self._slots[v]):
+            if slot.done:
+                continue
+            frac = float(out.n_accept[idx]) / max(cap, 1)
+            slot.accept_ema = 0.8 * slot.accept_ema + 0.2 * frac
+            fracs.append(slot.accept_ema)
+        if fracs:
+            self._accept_window.append(float(np.mean(fracs)))
+
     def _maybe_replan(self):
         cfg = self.config
-        if (cfg.replan_threshold is None
-                or self._rounds % cfg.replan_interval
-                or not self._occ_window):
+        if ((cfg.replan_threshold is None
+                and cfg.replan_accept_drift is None)
+                or self._rounds % cfg.replan_interval):
             return
-        occ = float(np.mean(self._occ_window))
-        self._occ_window = []
-        if abs(occ - self._planned_occ) <= cfg.replan_threshold:
+        occ, occ_drifted = self._planned_occ, False
+        if cfg.replan_threshold is not None and self._occ_window:
+            occ = float(np.mean(self._occ_window))
+            self._occ_window = []
+            occ_drifted = abs(occ - self._planned_occ) > cfg.replan_threshold
+        acc, acc_drifted = self._planned_accept, False
+        if cfg.replan_accept_drift is not None and self._accept_window:
+            acc = float(np.mean(self._accept_window))
+            self._accept_window = []
+            acc_drifted = (abs(acc - self._planned_accept)
+                           > cfg.replan_accept_drift)
+        if not (occ_drifted or acc_drifted):
             return
         wl = Workload(prompt_len=max(1, self._len_sum
                                      // max(1, self._req_seen)),
                       gen_len=max(1, self._gen_sum
                                   // max(1, self._req_seen)),
+                      accept_prob=min(max(acc, 0.01), 0.99),
                       occupancy=max(occ, 1e-3),
                       kv_bytes_per_seq=self._kv_bytes_per_seq())
-        rep = ParaSpecPlanner(self.target_cfg, self.draft_cfg,
-                              self.hw, obs=self.obs).search(wl)
+        planner = ParaSpecPlanner(self.target_cfg, self.draft_cfg,
+                                  self.hw, obs=self.obs)
+        # acceptance-aware replans search the joint chain-vs-tree budget
+        # space; pure-occupancy replans keep the paper's chain search
+        if cfg.spec_tree is not None or cfg.replan_accept_drift is not None:
+            rep = planner.search_spec(wl)
+        else:
+            rep = planner.search(wl)
         self.suggested_policy = rep.policy
-        self._planned_occ = occ
+        self.suggested_tree = rep.policy.tree
+        self._planned_occ, self._planned_accept = occ, acc
         self.replan_events.append({"round": self._rounds, "occupancy": occ,
+                                   "accept_rate": acc,
                                    "policy": rep.policy,
+                                   "tree": rep.policy.tree,
                                    "throughput": rep.throughput})
 
     # ------------------------------------------------------------------
@@ -542,10 +615,12 @@ class ServingEngine:
                 t_wall = time.time()
                 out = self.engine.decode_round(self._halves[v],
                                                self._halves[1 - v],
-                                               cfg.n_cand, record=False)
+                                               cfg.n_cand, record=False,
+                                               tree=cfg.spec_tree)
                 self._now += time.time() - t_wall
                 self._rounds += 1
                 self._record_occupancy()
+                self._record_acceptance_ema(v, out)
                 if self.obs.metrics.enabled:
                     self._round_metrics(out, live_v)
                 completed += self._process_emissions(v, out)
@@ -567,8 +642,10 @@ class ServingEngine:
                   "fraction of batch slots holding live sequences").set(
                       self._occ_window[-1] if self._occ_window
                       else self._occ_sum / max(1, self._rounds))
-        record_acceptance(reg, out.n_accept, self.config.n_cand,
-                          live_mask=live_v)
+        record_acceptance(reg, out.n_accept, self._depth_cap(),
+                          live_mask=live_v, n_draft=self._cand_equiv(),
+                          mode="tree" if self.config.spec_tree is not None
+                          else "chain")
 
     def _sync_metrics(self):
         """Bring scrape-time gauges/counters up to date: pipeline trace
@@ -688,6 +765,9 @@ class ServingEngine:
             "fused_compiles": 0 if pipe is None
             else pipe.trace_counts["fused"],
             "replans": len(self.replan_events),
+            "spec_mode": ("tree" if self.config.spec_tree is not None
+                          else "chain"),
+            "spec_tree": self.config.spec_tree,
             "kv": self.kv_stats(),
         }
 
