@@ -7,6 +7,10 @@ tokens/s, peak resident target-KV bytes, and the fused-step compile count
 benchmarks/run.py: ``(name, value, derived)``.
 
     PYTHONPATH=src python -m benchmarks.serving_bench [--requests N]
+    # open-loop asyncio serving (2 tenants, bounded admission queue,
+    # priority preemption) vs closed-loop run() on the same trace
+    #   -> BENCH_serving_async.json
+    PYTHONPATH=src python -m benchmarks.serving_bench --async
     # paged-vs-contiguous A/B on the same trace -> BENCH_serving_paged.json
     PYTHONPATH=src python -m benchmarks.serving_bench --compare [--out F]
     # chain-vs-tree speculation A/B at equal candidate budget
@@ -101,6 +105,7 @@ def _summary(out: dict) -> dict:
                 np.percentile([r.decode_s for r in out["done"]],
                               (50, 95, 99)))},
         "fused_compiles": st["fused_compiles"],
+        "rejected": st["rejected"],
         "kv": kv,
         "peak_kv_bytes": float(kv["peak_kv_bytes"]),
     }
@@ -194,6 +199,129 @@ def compare_spec(requests: int = 10, gen: int = 8, rate: float = 2.0,
     return report
 
 
+def _async_engine(clock: str, spec=None):
+    """Reduced engine with the QoS knobs both async-A/B legs share."""
+    from repro.configs.base import MIXTRAL_8X7B, MISTRAL_7B
+    from repro.serving.engine import SchedulerConfig, ServingEngine
+
+    tcfg = MIXTRAL_8X7B.reduced(d_model=64)
+    dcfg = MISTRAL_7B.reduced(d_model=32, vocab=tcfg.vocab_size)
+    # explicit max_len: the open-loop leg sizes caches at the *first*
+    # arrival, so capacity must already cover the trace's longest
+    # prompt (the closed-loop leg sees the whole queue up front)
+    eng = ServingEngine(tcfg, dcfg, config=SchedulerConfig(
+        max_batch=2, n_cand=2, length_bucket=16, max_len=160,
+        clock=clock, qos=True,
+        tenant_weights={"acme": 2.0, "beta": 1.0},
+        preempt=True, preempt_min_remaining=2))
+    return eng, tcfg
+
+
+TENANTS = {"acme": {"share": 2.0, "priority": 1},
+           "beta": {"share": 1.0, "priority": 0}}
+
+
+def _tenant_trace(requests: int, gen: int, rate: float, seed: int,
+                  vocab: int) -> list:
+    from repro.serving.trace import tenant_poisson_requests
+
+    rng = np.random.default_rng(seed)
+    lens = [int(rng.integers(48, 81)) if rng.random() < 0.25
+            else int(rng.integers(8, 17)) for _ in range(requests)]
+    prompts = [rng.integers(0, vocab, L).astype(np.int32) for L in lens]
+    gens = rng.integers(max(2, gen // 2), gen + 1, requests)
+    return tenant_poisson_requests(prompts, gens.tolist(), rate,
+                                   TENANTS, seed)
+
+
+def _tenant_ttft(handles: list) -> dict:
+    from repro.serving.engine import latency_percentiles
+
+    out: dict = {}
+    for t in sorted({r.tenant for r in handles}):
+        rs = [r for r in handles if r.tenant == t]
+        out[t] = {"requests": len(rs),
+                  "ttft_s": latency_percentiles(rs, "ttft_s"),
+                  "e2e_s": latency_percentiles(rs, "latency_s")}
+    return out
+
+
+def async_compare(requests: int = 10, gen: int = 8, rate: float = 2.0,
+                  seed: int = 0, speed: float = 8.0,
+                  max_queue: int = 6) -> dict:
+    """Open-loop asyncio leg vs the closed-loop ``run()`` path on the
+    same two-tenant Poisson trace -> ``BENCH_serving_async.json``.
+
+    The async leg streams token-by-token through
+    :class:`repro.serving.server.AsyncServingServer` with a bounded
+    admission queue (backpressure), weighted tenant fairness and
+    priority preemption; ``speed`` compresses the arrival gaps so the
+    CPU-reduced decode — not the trace clock — is the bottleneck.
+    Streams must match the closed-loop results token for token
+    (per-sequence losslessness), and the digest records per-tenant TTFT
+    percentiles plus the throughput ratio between the legs.
+    """
+    import asyncio
+
+    from repro.serving.server import AsyncServingServer
+    from repro.serving.trace import replay_open_loop
+
+    # ---- closed-loop leg: virtual clock, same trace -----------------
+    eng, tcfg = _async_engine("virtual")
+    eng.init_from_seed(seed)
+    closed_reqs = _tenant_trace(requests, gen, rate, seed,
+                                tcfg.vocab_size)
+    for r in closed_reqs:
+        eng.submit(r)
+    closed_done = eng.run()
+    closed_tps = eng.throughput(closed_done)
+    closed_stats = eng.stats()
+
+    # ---- open-loop async leg: real clock, same trace ----------------
+    aeng, _ = _async_engine("real")
+    aeng.init_from_seed(seed)
+    trace = _tenant_trace(requests, gen, rate, seed, tcfg.vocab_size)
+
+    async def _drive():
+        async with AsyncServingServer(aeng, max_queue=max_queue) as srv:
+            return await replay_open_loop(srv, trace, speed=speed)
+
+    tokens, handles = asyncio.run(_drive())
+    async_stats = aeng.stats()
+    async_tps = aeng.throughput(handles)
+
+    closed_by_rid = {r.rid: list(map(int, r.result)) for r in closed_done}
+    parity = all(tokens.get(rid) == toks
+                 for rid, toks in closed_by_rid.items())
+    report = {
+        "trace": {"requests": requests, "gen": gen, "rate_rps": rate,
+                  "seed": seed, "speed": speed, "max_queue": max_queue,
+                  "tenants": TENANTS,
+                  "config": "MIXTRAL_8X7B.reduced(d_model=64) / "
+                            "max_batch=2 x2, n_cand=2, qos+preempt"},
+        "closed_loop": {"tok_per_s": closed_tps,
+                        "rounds": closed_stats["rounds"],
+                        "occupancy": closed_stats["mean_occupancy"],
+                        "fused_compiles": closed_stats["fused_compiles"],
+                        "per_tenant": _tenant_ttft(closed_done)},
+        "async_open_loop": {"tok_per_s": async_tps,
+                            "rounds": async_stats["rounds"],
+                            "occupancy": async_stats["mean_occupancy"],
+                            "fused_compiles":
+                                async_stats["fused_compiles"],
+                            "rejected": async_stats["rejected"],
+                            "preempted": async_stats["preempted"],
+                            "streamed": sum(1 for v in tokens.values()
+                                            if v is not None),
+                            "drained": not aeng.has_work(),
+                            "per_tenant": _tenant_ttft(handles)},
+        "verdict": {"stream_parity_with_closed_loop": parity,
+                    "tok_per_s_ratio_async_over_closed":
+                        async_tps / max(closed_tps, 1e-9)},
+    }
+    return report
+
+
 def obs_run(requests: int = 10, gen: int = 8, rate: float = 2.0,
             seed: int = 0, trace_out: str | None = None,
             metrics_out: str | None = None) -> dict:
@@ -267,6 +395,14 @@ def main():
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--rate", type=float, default=2.0)
+    ap.add_argument("--async", dest="run_async", action="store_true",
+                    help="open-loop asyncio serving leg (2 tenants, "
+                         "bounded queue, preemption) vs the closed-loop "
+                         "run() path on the same trace")
+    ap.add_argument("--speed", type=float, default=8.0,
+                    help="arrival-gap compression for the async leg")
+    ap.add_argument("--async-out", default="BENCH_serving_async.json",
+                    help="JSON report path for --async")
     ap.add_argument("--compare", action="store_true",
                     help="contiguous vs paged A/B on one fixed trace")
     ap.add_argument("--out", default="BENCH_serving_paged.json",
@@ -287,6 +423,27 @@ def main():
     ap.add_argument("--obs-out", default="BENCH_serving_obs.json",
                     help="utilization digest path for the obs run")
     args = ap.parse_args()
+    if args.run_async:
+        report = async_compare(args.requests, args.gen, args.rate,
+                               speed=args.speed)
+        with open(args.async_out, "w") as f:
+            json.dump(report, f, indent=2)
+        v = report["verdict"]
+        a = report["async_open_loop"]
+        print(f"wrote {args.async_out}")
+        print(f"stream parity with closed loop: "
+              f"{v['stream_parity_with_closed_loop']}; drained: "
+              f"{a['drained']}; rejected {a['rejected']}, "
+              f"preempted {a['preempted']}")
+        print(f"tok/s async/closed: "
+              f"{v['tok_per_s_ratio_async_over_closed']:.2f}x "
+              f"({a['tok_per_s']:.2f} vs "
+              f"{report['closed_loop']['tok_per_s']:.2f})")
+        for t, d in a["per_tenant"].items():
+            print(f"  tenant {t}: {d['requests']} reqs, ttft p50 "
+                  f"{d['ttft_s']['p50']:.3f}s p95 "
+                  f"{d['ttft_s']['p95']:.3f}s")
+        return
     if args.trace_out or args.metrics_out:
         digest = obs_run(args.requests, args.gen, args.rate,
                          trace_out=args.trace_out,

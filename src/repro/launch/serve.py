@@ -7,6 +7,11 @@ for the selected arch on the v5e mesh (``--plan``).
 Requests arrive on a Poisson trace (``--rate`` req/s, virtual clock);
 the report covers slot occupancy, TTFT / end-to-end latency percentiles,
 and sustained tokens/s.
+
+``--async`` serves the same trace through the always-on asyncio front
+door instead (:mod:`repro.serving.server`): real clock, two tenants
+with weighted fairness + priority preemption, bounded admission queue,
+token-by-token streaming, graceful drain.
 """
 from __future__ import annotations
 
@@ -20,6 +25,47 @@ from repro.serving.engine import (SchedulerConfig, ServingEngine,
                                   latency_percentiles)
 from repro.serving.trace import poisson_requests
 from repro.sim.hardware import ENVS
+
+
+def _serve_async(eng, prompts, gens, args):
+    """submit -> stream -> drain through the asyncio front door: an
+    open-loop two-tenant Poisson replay with live token streaming."""
+    import asyncio
+
+    from repro.serving.engine import latency_percentiles
+    from repro.serving.server import AsyncServingServer
+    from repro.serving.trace import replay_open_loop, \
+        tenant_poisson_requests
+
+    reqs = tenant_poisson_requests(
+        prompts, gens, args.rate,
+        {"acme": {"share": 2.0, "priority": 1},
+         "beta": {"share": 1.0, "priority": 0}})
+
+    async def drive():
+        async with AsyncServingServer(eng, max_queue=max(4,
+                                                         args.batch * 4)
+                                      ) as srv:
+            tokens, handles = await replay_open_loop(srv, reqs,
+                                                     speed=args.speed)
+        return tokens, handles, srv.tenant_report()
+
+    tokens, handles, per_tenant = asyncio.run(drive())
+    st = eng.stats()
+    toks = sum(len(v) for v in tokens.values() if v is not None)
+    print(f"async-served {len(handles)} requests, {toks} streamed "
+          f"tokens in {st['wall_s']:.1f}s engine wall "
+          f"({eng.throughput(handles):.2f} tok/s, reduced config "
+          f"'{eng.target_cfg.name}')")
+    print(f"occupancy={st['mean_occupancy']:.2f} over {st['rounds']} "
+          f"rounds, fused compiles={st['fused_compiles']}, "
+          f"rejected={st['rejected']}, preempted={st['preempted']}, "
+          f"drained={not eng.has_work()}")
+    for t, d in per_tenant.items():
+        print(f"  tenant {t}: {d['requests']} reqs  ttft "
+              + "  ".join(f"{k}={v:.3f}s" for k, v in d['ttft_s'].items()))
+    pct = latency_percentiles(handles, "latency_s")
+    print("  e2e : " + "  ".join(f"{k}={v:.3f}s" for k, v in pct.items()))
 
 
 def main():
@@ -37,6 +83,12 @@ def main():
     ap.add_argument("--rate", type=float, default=1.0,
                     help="Poisson arrival rate (req/s, virtual clock)")
     ap.add_argument("--admission", default="fifo", choices=("fifo", "sjf"))
+    ap.add_argument("--async", dest="run_async", action="store_true",
+                    help="serve through the always-on asyncio front "
+                         "door (real clock, 2 tenants, bounded "
+                         "admission queue, token streaming, drain)")
+    ap.add_argument("--speed", type=float, default=8.0,
+                    help="arrival-gap compression for --async")
     ap.add_argument("--plan", action="store_true",
                     help="print the ParaSpec plan + placement and exit")
     args = ap.parse_args()
@@ -65,9 +117,12 @@ def main():
     tcfg = tcfg.reduced(d_model=128)
     dcfg = MISTRAL_7B.reduced(d_model=64, vocab=tcfg.vocab_size)
     eng = ServingEngine(tcfg, dcfg, hw,
-                        config=SchedulerConfig(max_batch=args.batch,
-                                               n_cand=args.n_cand,
-                                               admission=args.admission))
+                        config=SchedulerConfig(
+                            max_batch=args.batch, n_cand=args.n_cand,
+                            admission=args.admission,
+                            clock="real" if args.run_async else "virtual",
+                            qos=args.run_async, preempt=args.run_async,
+                            tenant_weights={"acme": 2.0, "beta": 1.0}))
     eng.init_from_seed(0)
 
     rng = np.random.default_rng(0)
@@ -75,6 +130,11 @@ def main():
                             args.prompt_len).astype(np.int32)
                for _ in range(args.requests)]
     gens = rng.integers(max(2, args.gen // 2), args.gen + 1, args.requests)
+
+    if args.run_async:
+        _serve_async(eng, prompts, gens.tolist(), args)
+        return
+
     for r in poisson_requests(prompts, gens.tolist(), args.rate):
         eng.submit(r)
 

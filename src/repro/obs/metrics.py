@@ -97,6 +97,11 @@ class Gauge:
 DEFAULT_BUCKETS = (0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25,
                    0.5, 1.0, 2.5, 5.0, 10.0)
 
+#: wider buckets for request-level latencies — per-tenant TTFT and
+#: end-to-end histograms reach minutes under queueing (seconds)
+LATENCY_BUCKETS = (0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5,
+                   5.0, 10.0, 30.0, 60.0, 120.0)
+
 
 def acceptance_buckets(n_cand: int) -> tuple:
     """Integer buckets 0..n_cand for accepted-draft-token histograms."""

@@ -1,5 +1,10 @@
 from repro.serving.engine import (SchedulerConfig, ServeRequest,
                                   ServingEngine, latency_percentiles)
+from repro.serving.server import AsyncServingServer, RequestRejected
+from repro.serving.trace import (poisson_requests, replay_open_loop,
+                                 tenant_poisson_requests)
 
 __all__ = ["SchedulerConfig", "ServeRequest", "ServingEngine",
-           "latency_percentiles"]
+           "latency_percentiles", "AsyncServingServer", "RequestRejected",
+           "poisson_requests", "tenant_poisson_requests",
+           "replay_open_loop"]

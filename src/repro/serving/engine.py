@@ -38,6 +38,18 @@ Round structure (one scheduler iteration)::
 When a :class:`SchedulerConfig` enables it, the engine re-runs the
 ParaSpec policy search online with the *measured* occupancy (the
 planner's effective-occupancy term) and records the suggested policy.
+
+Beyond closed-loop trace replay, the scheduler core is **reentrant**:
+:meth:`ServingEngine.run_step` executes exactly one iteration and
+``run()`` is just a loop over it.  The asyncio front door
+(:mod:`repro.serving.server`) drives ``run_step`` directly with
+``SchedulerConfig(clock="real")`` (wall clock instead of the virtual
+trace clock), streams tokens through ``emit_hook``/``finish_hook`` as
+they retire, and layers multi-tenant QoS on admission: priority
+classes, weighted per-tenant fair ordering (``qos=True``), and
+preemption of long-tail decodes (``preempt=True`` — progress is saved
+and the request is re-prefilled over prompt+progress on re-admission,
+keeping the greedy stream lossless).
 """
 from __future__ import annotations
 
@@ -59,6 +71,7 @@ from repro.core.spec_decode import (record_acceptance, tree_n_nodes,
 from repro.models.transformer import (admit_sequence_paged, init_cache,
                                       init_paged_cache, release_slot_paged)
 from repro.obs import bubble_report, make_obs
+from repro.obs.metrics import LATENCY_BUCKETS
 from repro.serving.paged_kv import BlockAllocator, prefix_block_keys
 from repro.sim.hardware import ENV1, HardwareSpec
 
@@ -75,6 +88,22 @@ class ServeRequest:
     admitted_s: float = float("nan")
     first_token_s: float = float("nan")
     finished_s: float = float("nan")
+    # ---- QoS (multi-tenant serving; defaults keep single-tenant runs
+    # byte-identical to the pre-QoS scheduler) ----
+    tenant: str = "default"
+    priority: int = 1             # lower value = more urgent class
+    progress: list = field(default_factory=list)  # tokens emitted before
+                                  # a preemption; re-admission prefills
+                                  # prompt+progress and resumes exactly
+    admitted_prompt: np.ndarray | None = None  # bucket-padded prompt,
+                                  # frozen at first admission so a
+                                  # post-preemption resume rebuilds the
+                                  # identical context
+    preemptions: int = 0
+    rejected: str | None = None   # submit()-time rejection reason
+    # run-window indices for windowed throughput attribution
+    admitted_run: int = -1
+    finished_run: int = -1
 
     @property
     def queue_s(self) -> float:
@@ -127,6 +156,27 @@ class SchedulerConfig:
                                   # slots) that triggers a chain-vs-tree
                                   # budget re-search (None: off)
     replan_interval: int = 32     # rounds between drift checks
+    # ---- clock + admission bounds (async front door) ----
+    clock: str = "virtual"        # "virtual": trace replay, advances by
+                                  # measured step wall time and fast-
+                                  # forwards idle gaps; "real": wall
+                                  # seconds since engine construction
+                                  # (the async server's mode)
+    max_queue: int | None = None  # bounded admission queue: submit()
+                                  # past this depth is a graceful
+                                  # rejection, never an exception
+    # ---- multi-tenant QoS (layered on `admission`) ----
+    qos: bool = False             # order arrivals by (priority class,
+                                  # weighted per-tenant virtual time)
+                                  # before the FIFO/SJF key
+    tenant_weights: dict = field(default_factory=dict)  # tenant ->
+                                  # fair-share weight (default 1.0)
+    preempt: bool = False         # evict long-tail decodes when a
+                                  # strictly higher-priority request is
+                                  # starved (progress saved + requeued)
+    preempt_min_remaining: int = 4  # never evict a decode with fewer
+                                  # tokens left than this (it will free
+                                  # the slot soon anyway)
     # ---- paged KV substrate (target full-attention layers only) ----
     paged: bool = True            # block-table pool instead of per-slot
                                   # (B, max_len) target KV; False keeps the
@@ -234,6 +284,22 @@ class ServingEngine:
         self.replan_events = []
         self.suggested_policy: Policy | None = None
         self.suggested_tree: tuple | None = None
+        if self.config.clock not in ("virtual", "real"):
+            raise ValueError(f"SchedulerConfig.clock must be 'virtual' or "
+                             f"'real', got {self.config.clock!r}")
+        self._real_clock = self.config.clock == "real"
+        self._epoch = time.monotonic()   # real-clock zero point
+        self._windows = []            # wall seconds of each sealed run()
+        self._open_window_s = 0.0     # wall accumulated since last seal
+        self._tenant_vtime = {}       # tenant -> weighted service time
+        self._tenants_seen = set()
+        self.rejected_total = 0
+        self.preempted_total = 0
+        self.idle_step = False        # last run_step() only ticked clock
+        # per-emission hooks for the async front door (called with
+        # (request, token) / (request,) as tokens retire)
+        self.emit_hook = None
+        self.finish_hook = None
 
     # ------------------------------------------------------------------
     def load(self, target_params, draft_params):
@@ -242,25 +308,68 @@ class ServingEngine:
     def init_from_seed(self, seed: int = 0):
         self.engine.init_from_seed(seed)
 
-    def submit(self, req: ServeRequest):
-        if self._max_len is not None:
-            need = self._required_len(req)
-            if need > self._max_len:
-                raise ValueError(
-                    f"request {req.rid} needs {need} KV slots > engine "
-                    f"capacity {self._max_len}; raise SchedulerConfig."
-                    f"max_len before the first run()")
-        if self.config.paged and self.config.num_blocks is not None:
-            nb = self._required_blocks(req)
-            if nb > self.config.num_blocks - 1:
-                raise ValueError(
-                    f"request {req.rid} needs {nb} KV blocks > pool "
-                    f"capacity {self.config.num_blocks - 1}; raise "
-                    f"SchedulerConfig.num_blocks")
+    def submit(self, req: ServeRequest) -> bool:
+        """Queue a request.  Never raises: a request that could not ever
+        fit (KV capacity / block pool) or that finds the bounded
+        admission queue full is *rejected* — ``req.rejected`` records
+        the reason, ``serve_requests_rejected_total`` counts it, and
+        False is returned so trace replays and the async front door's
+        backpressure path simply move on to the next request."""
+        reason = None
+        if (self._max_len is not None
+                and self._required_len(req) > self._max_len):
+            reason = "never_fits"
+        elif (self.config.paged and self.config.num_blocks is not None
+                and self._required_blocks(req)
+                > self.config.num_blocks - 1):
+            reason = "never_fits"
+        elif (self.config.max_queue is not None
+                and len(self._queue) >= self.config.max_queue):
+            reason = "queue_full"
+        if reason is not None:
+            req.rejected = reason
+            self.rejected_total += 1
+            if self.obs.enabled:
+                self.obs.metrics.counter(
+                    "serve_requests_rejected_total",
+                    "requests rejected at submit (never fits / bounded "
+                    "queue full)").inc(1, reason=reason, tenant=req.tenant)
+            return False
+        self._tenants_seen.add(req.tenant)
         self._queue.append(req)
+        return True
 
     def pending(self) -> int:
         return len(self._queue)
+
+    # ------------------------------------------------------------------
+    # scheduler clock
+
+    def now(self) -> float:
+        """Scheduler clock (s): the virtual trace clock, or wall seconds
+        since engine construction in real-clock mode."""
+        if self._real_clock:
+            self._refresh_now()
+        return self._now
+
+    def _refresh_now(self):
+        self._now = time.monotonic() - self._epoch
+
+    def _tick(self, dt: float):
+        """Advance the clock past a step that took ``dt`` wall seconds
+        (virtual mode adds it; the real clock advances on its own)."""
+        if self._real_clock:
+            self._refresh_now()
+        else:
+            self._now += dt
+
+    def has_live(self) -> bool:
+        """True while any slot holds an unfinished sequence."""
+        return (self._slots is not None
+                and any(not s.done for half in self._slots for s in half))
+
+    def has_work(self) -> bool:
+        return self.has_live() or bool(self._queue)
 
     def _cand_equiv(self) -> int:
         """Per-round uncommitted-token budget for cache sizing: tree mode
@@ -278,11 +387,16 @@ class ServingEngine:
         return self.config.n_cand
 
     def _required_len(self, req: ServeRequest) -> int:
+        # the bucket applies to the prompt alone (frozen at first
+        # admission); a preempted request re-prefills prompt+progress
+        # with only its remaining tokens left to generate, so the total
+        # never exceeds the first admission's reservation
         l = len(req.prompt)
         if self.config.length_bucket:
             b = self.config.length_bucket
             l = -(-l // b) * b
-        return required_cache_len(l, req.max_new_tokens,
+        l += len(req.progress)
+        return required_cache_len(l, req.max_new_tokens - len(req.progress),
                                   self._cand_equiv())
 
     def _required_blocks(self, req: ServeRequest) -> int:
@@ -337,9 +451,26 @@ class ServingEngine:
 
     def _admission_order(self, arrived: list) -> list:
         if self.config.admission == "sjf":
-            return sorted(arrived,
-                          key=lambda r: (r.max_new_tokens, len(r.prompt)))
-        return arrived                # fifo: submission order
+            arrived = sorted(arrived,
+                             key=lambda r: (r.max_new_tokens,
+                                            len(r.prompt)))
+        if self.config.qos:
+            # priority class first, then weighted fair sharing: tenants
+            # are ordered by accumulated virtual service time (charged
+            # at admission as (prompt+remaining)/weight), so a tenant
+            # that has consumed less of its share goes first.  The sort
+            # is stable, so the FIFO/SJF key still breaks ties.
+            arrived = sorted(
+                arrived,
+                key=lambda r: (r.priority,
+                               self._tenant_vtime.get(r.tenant, 0.0)))
+        return arrived
+
+    def _charge_tenant(self, req: ServeRequest, prompt_len: int):
+        w = float(self.config.tenant_weights.get(req.tenant, 1.0))
+        cost = (prompt_len + req.max_new_tokens - len(req.progress))
+        self._tenant_vtime[req.tenant] = (
+            self._tenant_vtime.get(req.tenant, 0.0) + cost / max(w, 1e-9))
 
     def _try_grant(self, h: int, prompt: np.ndarray,
                    req: ServeRequest) -> tuple | None:
@@ -350,7 +481,8 @@ class ServingEngine:
         free blocks (never a crash; tested in test_paged_kv.py)."""
         cfg = self.config
         alloc = self._allocs[h]
-        need = required_cache_len(len(prompt), req.max_new_tokens,
+        need = required_cache_len(len(prompt),
+                                  req.max_new_tokens - len(req.progress),
                                   self._cand_equiv())
         n_need = -(-need // cfg.block_size)
         keys = (prefix_block_keys(prompt, cfg.block_size)
@@ -370,35 +502,58 @@ class ServingEngine:
             alloc.register(block_ids[j], keys[j])
         return block_ids, len(shared)
 
+    def _admit_tokens(self, req: ServeRequest) -> np.ndarray:
+        """Prefill token stream for a request: its prompt (bucket-padded
+        once, then frozen, so a post-preemption resume re-prefills the
+        identical context) extended by any progress saved at
+        preemption."""
+        if req.admitted_prompt is None:
+            toks = np.asarray(req.prompt, np.int32)
+            if self.config.length_bucket:
+                b = self.config.length_bucket
+                tgt = -(-len(toks) // b) * b
+                toks = np.concatenate(
+                    [np.full(tgt - len(toks), self.config.pad_id,
+                             np.int32), toks])
+            req.admitted_prompt = toks
+        toks = req.admitted_prompt
+        if req.progress:
+            toks = np.concatenate(
+                [toks, np.asarray(req.progress, np.int32)])
+        return toks
+
     def _admit(self, h: int) -> list:
         """Admit arrived requests into free slots of half ``h``.  Only
-        legal while the half's drafts are un-staged (drafts is None)."""
+        legal while the half's drafts are un-staged (drafts is None).
+        One request is picked per free slot so the QoS fairness keys
+        (updated by each admission's virtual-time charge) stay fresh."""
         half, slots = self._halves[h], self._slots[h]
         assert half.drafts is None, "admission while drafts staged"
         cfg = self.config
         finished = []
         free = [i for i, s in enumerate(slots) if s.done]
-        if not free or not self._queue:
-            return finished
-        arrived = [r for r in self._queue if r.arrival_s <= self._now]
-        for req in self._admission_order(arrived):
-            if not free:
+        while free and self._queue:
+            arrived = [r for r in self._queue if r.arrival_s <= self._now]
+            picked = None
+            for req in self._admission_order(arrived):
+                prompt = self._admit_tokens(req)
+                grant = None
+                if cfg.paged:
+                    grant = self._try_grant(h, prompt, req)
+                    if grant is None:    # block pressure: stays queued
+                        continue
+                picked = (req, prompt, grant)
                 break
-            prompt = np.asarray(req.prompt, np.int32)
-            if cfg.length_bucket:
-                b = cfg.length_bucket
-                tgt = -(-len(prompt) // b) * b
-                prompt = np.concatenate(
-                    [np.full(tgt - len(prompt), cfg.pad_id, np.int32),
-                     prompt])
-            grant = None
-            if cfg.paged:
-                grant = self._try_grant(h, prompt, req)
-                if grant is None:        # block pressure: stays queued
-                    continue
+            if picked is None:
+                break
+            req, prompt, grant = picked
             slot_idx = free.pop(0)
             self._queue.remove(req)
             req.admitted_s = self._now
+            if req.admitted_run < 0:
+                req.admitted_run = len(self._windows)
+            if cfg.qos:
+                self._charge_tenant(req, len(prompt))
             t_wall = time.time()
             with self.obs.tracer.span("admit", "admit") as asp:
                 st = self.engine.prefill_batch(prompt[None, :],
@@ -426,7 +581,7 @@ class ServingEngine:
             t0 = int(np.asarray(st.t_next)[0])
             half.t_next = half.t_next.at[slot_idx].set(t0)
             dt = time.time() - t_wall
-            self._now += dt
+            self._tick(dt)
             if self.obs.enabled:
                 # splicing the prefilled KV into the serving cache is the
                 # engine's host->device KV hand-off (paper Table 3 P row)
@@ -443,16 +598,27 @@ class ServingEngine:
                     "admit", "admitted",
                     {"rid": req.rid, "half": h, "slot": slot_idx,
                      "prompt_len": len(prompt)})
-            req.first_token_s = self._now
+            if np.isnan(req.first_token_s):   # not set on re-admission
+                req.first_token_s = self._now
+                if self.obs.enabled:
+                    self.obs.metrics.histogram(
+                        "serve_ttft_seconds",
+                        "arrival -> first token, labeled per tenant",
+                        buckets=LATENCY_BUCKETS).observe(
+                            req.ttft_s, tenant=req.tenant)
             slot = slots[slot_idx]
-            slot.req, slot.emitted, slot.done = req, [t0], False
+            slot.req = req
+            slot.emitted = list(req.progress) + [t0]
+            slot.done = False
             slot.blocks = list(grant[0]) if grant else []
+            if self.emit_hook is not None:
+                self.emit_hook(req, t0)
             self._len_sum += len(prompt)
             self._gen_sum += req.max_new_tokens
             self._req_seen += 1
             # a 1-token request (or instant EOS) finishes at admission
             if ((cfg.eos_id >= 0 and t0 == cfg.eos_id)
-                    or req.max_new_tokens <= 1):
+                    or len(slot.emitted) >= req.max_new_tokens):
                 self._finish(h, slot_idx)
                 finished.append(req)
         return finished
@@ -462,6 +628,7 @@ class ServingEngine:
         req = slot.req
         req.result = np.asarray(slot.emitted, np.int32)
         req.finished_s = self._now
+        req.finished_run = len(self._windows)
         req.latency_s = self._now - req.arrival_s
         self._tokens_out += len(req.result)
         if self.obs.enabled:
@@ -472,18 +639,77 @@ class ServingEngine:
                 "admit", "retired",
                 {"rid": req.rid, "half": h, "slot": idx,
                  "tokens": len(req.result)})
+        self._release_slot(h, idx)
+        if self.finish_hook is not None:
+            self.finish_hook(req)
+
+    def _release_slot(self, h: int, idx: int):
+        """Clear a slot and return its KV blocks to the pool (shared by
+        retirement and preemption).  The paged table row + pos are
+        nulled *before* the blocks can be re-granted: the vacated slot
+        keeps riding the fused step, and its dead decode writes must
+        land in the scratch block, not in blocks now owned by another
+        sequence."""
+        slot = self._slots[h][idx]
         slot.req, slot.emitted, slot.done = None, [], True
         if self.config.paged and slot.blocks:
-            # Null the slot's table row + pos *before* its blocks can be
-            # re-granted: the retired slot keeps riding the fused step,
-            # and its decode writes must land in the scratch block, not
-            # in blocks now owned by another sequence.
             half = self._halves[h]
             half.target_cache = self._release_paged(half.target_cache, idx)
             alloc = self._allocs[h]
             for bid in slot.blocks:
                 alloc.decref(bid)
             slot.blocks = []
+
+    def preempt(self, h: int, idx: int) -> ServeRequest:
+        """Evict the live sequence in slot ``idx`` of half ``h``: its
+        emitted tokens are saved as ``req.progress``, its KV blocks
+        return to the pool, and the request rejoins the queue (original
+        arrival stamp, so its place in FIFO order is kept).  On
+        re-admission the engine prefills prompt+progress, so the resumed
+        greedy stream continues exactly where it stopped (losslessness
+        is tested in tests/test_async_server.py).  Only legal while the
+        half's drafts are un-staged — same window as admission."""
+        half = self._halves[h]
+        assert half.drafts is None, "preemption while drafts staged"
+        slot = self._slots[h][idx]
+        req = slot.req
+        req.progress = list(slot.emitted)
+        req.preemptions += 1
+        self.preempted_total += 1
+        self._release_slot(h, idx)
+        self._queue.append(req)
+        if self.obs.enabled:
+            self.obs.metrics.counter(
+                "serve_requests_preempted_total",
+                "live decodes evicted for higher-priority arrivals "
+                "(progress saved, requeued)").inc(1, tenant=req.tenant)
+            self.obs.tracer.instant(
+                "admit", "preempted",
+                {"rid": req.rid, "half": h, "slot": idx,
+                 "progress": len(req.progress)})
+        return req
+
+    def _maybe_preempt(self, h: int):
+        """Priority preemption: when a strictly higher-priority request
+        is waiting and half ``h`` has no free slot, evict the lowest-
+        priority live decode with the most remaining tokens (the long
+        tail), provided it still has >= preempt_min_remaining to go."""
+        slots = self._slots[h]
+        if any(s.done for s in slots):
+            return                    # a free slot: plain admission wins
+        arrived = [r for r in self._queue if r.arrival_s <= self._now]
+        if not arrived:
+            return
+        best = min(r.priority for r in arrived)
+        victims = [(s.req.priority,
+                    s.req.max_new_tokens - len(s.emitted), i)
+                   for i, s in enumerate(slots)
+                   if not s.done and s.req.priority > best
+                   and (s.req.max_new_tokens - len(s.emitted))
+                   >= self.config.preempt_min_remaining]
+        if victims:
+            _, _, idx = max(victims)
+            self.preempt(h, idx)
 
     def _process_emissions(self, h: int, out) -> list:
         """EOS-aware retirement: append this round's verified tokens to
@@ -495,8 +721,11 @@ class ServingEngine:
                 continue
             req = slot.req
             for t in out.tokens[idx, :int(out.n_emitted[idx])]:
-                slot.emitted.append(int(t))
-                if ((cfg.eos_id >= 0 and int(t) == cfg.eos_id)
+                tok = int(t)
+                slot.emitted.append(tok)
+                if self.emit_hook is not None:
+                    self.emit_hook(req, tok)
+                if ((cfg.eos_id >= 0 and tok == cfg.eos_id)
                         or len(slot.emitted) >= req.max_new_tokens):
                     self._finish(h, idx)
                     finished.append(req)
@@ -570,6 +799,87 @@ class ServingEngine:
                                    "throughput": rep.throughput})
 
     # ------------------------------------------------------------------
+    # wall-time windows (throughput attribution)
+
+    def _close_window(self):
+        """Seal the open per-run wall window.  run() seals at exit; a
+        direct run_step() driver (the async server) seals at drain."""
+        if self._open_window_s > 0.0:
+            self._windows.append(self._open_window_s)
+            self._open_window_s = 0.0
+
+    def _window_wall(self, i: int) -> float:
+        return (self._windows[i] if i < len(self._windows)
+                else self._open_window_s)
+
+    # ------------------------------------------------------------------
+    def run_step(self) -> list:
+        """One scheduler iteration: preempt/admit on whichever half has
+        un-staged drafts, one fused verify+draft round, retire.
+
+        Reentrant — ``run()`` is just a loop over this, and the async
+        front door (:mod:`repro.serving.server`) drives it directly,
+        interleaving event-loop work between rounds.  Returns the
+        requests retired by this step (``emit_hook``/``finish_hook``
+        fire inside).  ``self.idle_step`` is left True when nothing was
+        in flight: in virtual-clock mode the clock fast-forwarded to the
+        next arrival; in real-clock mode the caller should sleep/await
+        until arrivals are due.
+        """
+        cfg = self.config
+        self.idle_step = False
+        if self._halves is None and not self._queue:
+            self.idle_step = True
+            return []                 # nothing submitted yet: no-op
+        self._ensure_halves()
+        if self._real_clock:
+            self._refresh_now()
+        t_step0 = time.time()
+        completed = []
+        v = self._v
+        # One "round" span per scheduler iteration (admit -> fused
+        # verify+draft -> retire); renamed "idle" when the engine is
+        # empty and only fast-forwards the clock, so bubble accounting
+        # never counts waiting-for-arrivals as stall.
+        with self.obs.tracer.span("round", "round") as rs:
+            # slot surgery is legal on any half without staged drafts
+            for h in (v, 1 - v):
+                if self._halves[h].drafts is None:
+                    if cfg.preempt:
+                        self._maybe_preempt(h)
+                    completed += self._admit(h)
+            if not self.has_live():
+                rs.rename("idle")
+                self.idle_step = True
+                if self._queue and not self._real_clock:
+                    # fast-forward the virtual clock to the next arrival
+                    self._now = max(self._now,
+                                    min(r.arrival_s for r in self._queue))
+                dt = time.time() - t_step0
+                self._wall_s += dt
+                self._open_window_s += dt
+                return completed
+            live_v = ([not s.done for s in self._slots[v]]
+                      if self.obs.metrics.enabled else None)
+            t_wall = time.time()
+            out = self.engine.decode_round(self._halves[v],
+                                           self._halves[1 - v],
+                                           cfg.n_cand, record=False,
+                                           tree=cfg.spec_tree)
+            self._tick(time.time() - t_wall)
+            self._rounds += 1
+            self._record_occupancy()
+            self._record_acceptance_ema(v, out)
+            if self.obs.metrics.enabled:
+                self._round_metrics(out, live_v)
+            completed += self._process_emissions(v, out)
+            self._maybe_replan()
+            self._v = 1 - v
+        dt = time.time() - t_step0
+        self._wall_s += dt
+        self._open_window_s += dt
+        return completed
+
     def run(self, max_rounds: int = 100_000) -> list:
         """Serve until the queue and all in-flight sequences drain.
 
@@ -577,57 +887,31 @@ class ServingEngine:
         The two half-batches and their compiled programs persist across
         calls — submit more requests and call run() again for free.
         """
-        cfg = self.config
         if self._halves is None and not self._queue:
             return []                 # nothing submitted yet: no-op
         self._ensure_halves()
-        t_run0 = time.time()
-        # Fresh virtual clock only when nothing survived the previous run
-        # (a max_rounds-exhausted run leaves sequences in flight whose
-        # stamps live on the old clock — keep it running for them).
-        if not any(not s.done for half in self._slots for s in half):
-            self._now = 0.0
         completed = []
-        v = self._v
-        tr = self.obs.tracer
         for _ in range(max_rounds):
-            # One "round" span per scheduler iteration (admit -> fused
-            # verify+draft -> retire); renamed "idle" when the engine is
-            # empty and only fast-forwards the clock, so bubble
-            # accounting never counts waiting-for-arrivals as stall.
-            with tr.span("round", "round") as rs:
-                # slot surgery is legal on any half without staged drafts
-                for h in (v, 1 - v):
-                    if self._halves[h].drafts is None:
-                        completed += self._admit(h)
-                if not any(not s.done
-                           for half in self._slots for s in half):
-                    if not self._queue:
-                        rs.rename("idle")
-                        break
-                    # idle: fast-forward the clock to the next arrival
-                    rs.rename("idle")
-                    self._now = max(self._now,
-                                    min(r.arrival_s for r in self._queue))
-                    continue
-                live_v = ([not s.done for s in self._slots[v]]
-                          if self.obs.metrics.enabled else None)
-                t_wall = time.time()
-                out = self.engine.decode_round(self._halves[v],
-                                               self._halves[1 - v],
-                                               cfg.n_cand, record=False,
-                                               tree=cfg.spec_tree)
-                self._now += time.time() - t_wall
-                self._rounds += 1
-                self._record_occupancy()
-                self._record_acceptance_ema(v, out)
-                if self.obs.metrics.enabled:
-                    self._round_metrics(out, live_v)
-                completed += self._process_emissions(v, out)
-                self._maybe_replan()
-                v = 1 - v
-        self._v = v
-        self._wall_s += time.time() - t_run0
+            completed += self.run_step()
+            if not self.has_work():
+                break
+            if self.idle_step and self._real_clock and self._queue:
+                # real clock can't fast-forward: sleep toward the next
+                # arrival instead of spinning
+                gap = min(r.arrival_s for r in self._queue) - self.now()
+                if gap > 0:
+                    time.sleep(min(gap, 0.05))
+        self._close_window()
+        # Rebase the virtual clock only once the engine is *fully*
+        # drained: a max_rounds-exhausted run leaves sequences in flight
+        # or requests queued, and both carry stamps on the old clock —
+        # resetting under them corrupts queue_s/ttft_s/latency_s, so the
+        # clock stays monotonic until every reference to it has drained.
+        # Resetting at exit (not entry) also lets a fresh trace
+        # submitted after a full drain replay from t=0
+        # (tests/test_scheduler.py::test_multi_run_clock_monotonic).
+        if not self._real_clock and not self.has_work():
+            self._now = 0.0
         return completed
 
     # ------------------------------------------------------------------
@@ -638,6 +922,14 @@ class ServingEngine:
         reg = self.obs.metrics
         reg.gauge("serve_queue_depth",
                   "requests waiting for a free slot").set(len(self._queue))
+        if self._tenants_seen:
+            g = reg.gauge("serve_tenant_queue_depth",
+                          "queued requests, labeled per tenant")
+            depth: dict = {}
+            for r in self._queue:
+                depth[r.tenant] = depth.get(r.tenant, 0) + 1
+            for t in self._tenants_seen:
+                g.set(depth.get(t, 0), tenant=t)
         reg.gauge("serve_occupancy",
                   "fraction of batch slots holding live sequences").set(
                       self._occ_window[-1] if self._occ_window
@@ -696,12 +988,21 @@ class ServingEngine:
         max per-request latency, which overstates multi-wave runs).
 
         With ``done=None`` this is the engine-lifetime figure (same as
-        ``stats()['tok_per_s']``); passing a subset of completed requests
-        attributes only that subset's tokens to the full wall time."""
+        ``stats()['tok_per_s']``).  Passing a subset of completed
+        requests divides that subset's tokens by the wall time of only
+        the run windows those requests actually spanned (first admission
+        through finishing run), so per-policy A/B subsets served by one
+        engine compare on their own wall clock."""
         if done is None:
             return self._tokens_out / max(self._wall_s, 1e-9)
-        toks = sum(len(r.result) for r in done)
-        return toks / max(self._wall_s, 1e-9)
+        toks = sum(len(r.result) for r in done if r.result is not None)
+        wins: set = set()
+        for r in done:
+            if r.finished_run >= 0:
+                wins.update(range(max(r.admitted_run, 0),
+                                  r.finished_run + 1))
+        wall = sum(self._window_wall(w) for w in wins)
+        return toks / max(wall, 1e-9)
 
     def _attn_cache_bytes(self, cache: dict) -> int:
         """Bytes of the full-attention KV leaves of a target cache."""
@@ -764,6 +1065,8 @@ class ServingEngine:
             "tok_per_s": self._tokens_out / max(self._wall_s, 1e-9),
             "fused_compiles": 0 if pipe is None
             else pipe.trace_counts["fused"],
+            "rejected": self.rejected_total,
+            "preempted": self.preempted_total,
             "replans": len(self.replan_events),
             "spec_mode": ("tree" if self.config.spec_tree is not None
                           else "chain"),

@@ -190,9 +190,13 @@ def test_block_pressure_queues_instead_of_crashing(jitted):
 
 
 def test_submit_rejects_never_fitting_request():
+    """A reservation beyond the block pool is refused gracefully —
+    submit() returns False and stamps the reason instead of raising."""
     se = _mk_engine(num_blocks=4, max_len=48)
-    with pytest.raises(ValueError):
-        se.submit(ServeRequest(0, np.zeros(40, np.int32), 8))
+    big = ServeRequest(0, np.zeros(40, np.int32), 8)
+    assert se.submit(big) is False
+    assert big.rejected == "never_fits"
+    assert se.pending() == 0 and se.rejected_total == 1
 
 
 def test_kv_bytes_per_seq_feeds_planner():

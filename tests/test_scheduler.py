@@ -207,15 +207,125 @@ def test_contiguous_mode_regression(jitted):
         assert (np.asarray(ref)[0] == r.result).all()
 
 
-def test_submit_rejects_oversized_request():
+def test_submit_rejects_oversized_request_gracefully():
+    """A request that could never fit the KV budget is refused — not
+    crashed on: submit() returns False, stamps the reason, and the
+    rejection counter ticks, so live serving just moves on."""
     tcfg = tiny_config(("attn",))
     dcfg = tiny_draft_config()
     se = ServingEngine(tcfg, dcfg,
                        config=SchedulerConfig(max_batch=1, n_cand=2,
-                                              max_len=20))
+                                              max_len=32))
     se.init_from_seed(0)
-    with pytest.raises(ValueError):
-        se.submit(ServeRequest(0, np.zeros(30, np.int32), 8))
+    big = ServeRequest(0, np.zeros(30, np.int32), 8)   # needs 51 > 32
+    assert se.submit(big) is False
+    assert big.rejected == "never_fits"
+    assert se.pending() == 0 and se.rejected_total == 1
+    assert se.obs.metrics.counter(
+        "serve_requests_rejected_total").value(
+            reason="never_fits", tenant="default") == 1
+    assert se.stats()["rejected"] == 1
+    # a fitting request on the same engine is still served
+    ok = ServeRequest(1, np.zeros(6, np.int32), 4)
+    assert se.submit(ok) is True
+    assert len(se.run()) == 1 and len(ok.result) == 4
+
+
+def test_submit_rejects_when_bounded_queue_full():
+    tcfg = tiny_config(("attn",))
+    dcfg = tiny_draft_config()
+    se = ServingEngine(tcfg, dcfg,
+                       config=SchedulerConfig(max_batch=1, n_cand=2,
+                                              max_queue=2))
+    se.init_from_seed(0)
+    reqs = [ServeRequest(i, np.zeros(6, np.int32), 3) for i in range(3)]
+    assert se.submit(reqs[0]) and se.submit(reqs[1])
+    assert se.submit(reqs[2]) is False
+    assert reqs[2].rejected == "queue_full"
+    assert se.pending() == 2
+
+
+def test_multi_run_clock_monotonic():
+    """Regression for the virtual-clock reset bug: a max_rounds-
+    exhausted run() leaves a request queued; the next run() must NOT
+    rebase the clock underneath it.  Every stamp stays non-negative and
+    completion times are non-decreasing across the two runs."""
+    tcfg = tiny_config(("attn",))
+    dcfg = tiny_draft_config()
+    se = ServingEngine(tcfg, dcfg,
+                       config=SchedulerConfig(max_batch=1, n_cand=2))
+    se.init_from_seed(0)
+    rng = np.random.default_rng(11)
+    early = ServeRequest(0, rng.integers(0, 61, 6).astype(np.int32), 8)
+    # arrives far in the future (beyond any jit-compile wall charge) so
+    # the first run() exhausts max_rounds with it still queued on the
+    # old clock; the idle fast-forward covers the gap in run 2
+    late = ServeRequest(1, rng.integers(0, 61, 6).astype(np.int32), 4,
+                        arrival_s=1e4)
+    se.submit(early)
+    se.submit(late)
+    first = se.run(max_rounds=2)
+    assert se.pending() >= 1          # `late` still queued
+    clock_before = se.now()
+    # a fresh submission between runs lands on the same live clock
+    fresh = ServeRequest(2, rng.integers(0, 61, 6).astype(np.int32), 4)
+    se.submit(fresh)
+    done = first + se.run()
+    # never rebased under the queue: run-2 admissions continue past the
+    # run-1 clock (a reset would stamp `fresh` near zero again)
+    assert fresh.admitted_s >= clock_before
+    assert len(done) == 3
+    for r in (early, late, fresh):
+        assert r.admitted_s >= r.arrival_s >= 0.0
+        assert r.queue_s >= 0.0 and r.ttft_s >= 0.0
+        assert r.latency_s >= 0.0
+    fins = [r.finished_s for r in done]   # retirement order
+    assert all(a <= b for a, b in zip(fins, fins[1:]))
+    # a fully drained engine still starts the next trace at t=0
+    assert not se.has_work()
+    replay = ServeRequest(3, rng.integers(0, 61, 6).astype(np.int32), 3)
+    se.submit(replay)
+    se.run()
+    assert replay.admitted_s < late.arrival_s
+
+
+def test_windowed_throughput_attribution():
+    """throughput(done) over a subset divides by the wall time of the
+    run window(s) that served it — not the engine's lifetime wall.
+    Regression for the subset-over-full-wall underreporting bug."""
+    tcfg = tiny_config(("attn",))
+    dcfg = tiny_draft_config()
+    se = ServingEngine(tcfg, dcfg,
+                       config=SchedulerConfig(max_batch=2, n_cand=2))
+    se.init_from_seed(0)
+    rng = np.random.default_rng(13)
+
+    def batch(base, n=3, gen=5):
+        rs = [ServeRequest(base + i,
+                           rng.integers(0, 61, 6).astype(np.int32), gen)
+              for i in range(n)]
+        for r in rs:
+            se.submit(r)
+        return rs
+
+    a = batch(0)
+    done_a = se.run()
+    b = batch(10)
+    done_b = se.run()
+    assert len(done_a) == len(done_b) == 3
+    assert len(se._windows) == 2
+    toks_a = sum(len(r.result) for r in a)
+    toks_b = sum(len(r.result) for r in b)
+    # each subset is attributed exactly its own run's wall window
+    assert se.throughput(done_a) == pytest.approx(
+        toks_a / se._windows[0])
+    assert se.throughput(done_b) == pytest.approx(
+        toks_b / se._windows[1])
+    # lifetime view still spans everything
+    assert se.throughput() == pytest.approx(
+        (toks_a + toks_b) / se.stats()["wall_s"])
+    # run-2 subset rate is NOT diluted by run 1's wall time
+    assert se.throughput(done_b) > toks_b / se.stats()["wall_s"]
 
 
 # ---------------------------------------------------------------------------
