@@ -29,7 +29,8 @@ import numpy as np
 def run(rows: list, requests: int = 10, gen: int = 8, rate: float = 2.0,
         seed: int = 0, paged: bool = True, kv_quant_cold: bool = False,
         prefix: str = "serving", trace: bool = False, n_cand: int = 2,
-        spec_tree: tuple | None = None, vocab: int | None = None) -> dict:
+        spec_tree: tuple | None = None, vocab: int | None = None,
+        request_timeline: bool = False) -> dict:
     import dataclasses
 
     from repro.configs.base import MIXTRAL_8X7B, MISTRAL_7B
@@ -54,7 +55,9 @@ def run(rows: list, requests: int = 10, gen: int = 8, rate: float = 2.0,
                                                length_bucket=16,
                                                paged=paged,
                                                kv_quant_cold=kv_quant_cold,
-                                               trace=trace))
+                                               trace=trace,
+                                               request_timeline=
+                                               request_timeline))
     eng.init_from_seed(seed)
 
     rng = np.random.default_rng(seed)
@@ -333,9 +336,11 @@ def obs_run(requests: int = 10, gen: int = 8, rate: float = 2.0,
     """
     import json
 
+    from repro.obs import timelines_summary
+
     rows: list = []
     traced = run(rows, requests, gen, rate, seed, prefix="obs",
-                 trace=True)
+                 trace=True, request_timeline=True)
     eng = traced["engine"]
     rep = eng.metrics()
     util = rep["utilization"]
@@ -384,6 +389,11 @@ def obs_run(requests: int = 10, gen: int = 8, rate: float = 2.0,
         "untraced_tok_per_s": plain["stats"]["tok_per_s"],
         "untraced_fused_compiles": plain["stats"]["fused_compiles"],
         "trace_events": len(eng.chrome_trace()["traceEvents"]),
+        # request-level latency percentiles + per-request timeline
+        # aggregate (the bench_compare regression gate keys on these)
+        "ttft": traced["ttft"],
+        "e2e": traced["e2e"],
+        "request_timelines": timelines_summary(eng.request_timelines()),
     }
     return digest
 

@@ -32,6 +32,7 @@ compile tally for tests).
 from __future__ import annotations
 
 import functools
+import time
 from dataclasses import dataclass
 
 import jax
@@ -64,6 +65,11 @@ class RoundOutput:
     tokens: np.ndarray           # (B, m+1) output slots (d_1..d_a, bonus, 0s)
     n_emitted: np.ndarray        # (B,) in [1, m+1]: valid prefix of tokens
     n_accept: np.ndarray         # (B,) accepted draft tokens this round
+    # wall interval of the whole fused round (perf_counter seconds),
+    # measured unconditionally (two clock reads) so request-scoped
+    # timelines can attribute decode time without the span tracer on
+    t0: float = 0.0
+    t1: float = 0.0
 
 
 def fused_verify_and_draft(target_params, target_cfg: ModelConfig,
@@ -247,6 +253,7 @@ class InterleavedPipeline:
         """
         assert verify.drafts is not None, "verify batch has no staged drafts"
         assert gen.drafts is None, "gen batch already holds drafts"
+        t_round0 = time.perf_counter()
         vstate = {"target_cache": verify.target_cache,
                   "t_next": verify.t_next, "drafts": verify.drafts}
         if self.tree is not None:
@@ -281,7 +288,8 @@ class InterleavedPipeline:
         verify.drafts, verify.draft_pendings = None, None
         out = RoundOutput(tokens=np.asarray(vout["tokens"]),
                           n_emitted=np.asarray(vout["n_emitted"]),
-                          n_accept=np.asarray(vout["n_accept"]))
+                          n_accept=np.asarray(vout["n_accept"]),
+                          t0=t_round0, t1=time.perf_counter())
         if record:
             verify.emitted.append((out.tokens, out.n_emitted))
         # batch D: stash fresh drafts

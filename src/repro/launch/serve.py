@@ -66,6 +66,30 @@ def _serve_async(eng, prompts, gens, args):
               + "  ".join(f"{k}={v:.3f}s" for k, v in d['ttft_s'].items()))
     pct = latency_percentiles(handles, "latency_s")
     print("  e2e : " + "  ".join(f"{k}={v:.3f}s" for k, v in pct.items()))
+    _report_request_obs(eng)
+
+
+def _report_request_obs(eng):
+    """Print the request-timeline summary, SLO compliance and any
+    dumped postmortem bundles (when the respective knobs are on)."""
+    from repro.obs import timelines_summary
+    tls = eng.request_timelines()
+    if tls:
+        s = timelines_summary(tls)
+        print(f"timelines: {s['requests']} reqs  "
+              f"queue={s['queue_s_total']:.2f}s  "
+              f"prefill={s['prefill_s_total']:.2f}s  "
+              f"decode={s['decode_s_total']:.2f}s  "
+              f"stall={s['stall_s_total']:.2f}s")
+    rep = eng.slo_report()
+    if rep is not None:
+        for key, c in rep["compliance"].items():
+            print(f"  slo {key}: {c['compliance']:.0%} of "
+                  f"{c['evaluated']} in objective "
+                  f"({c['violations']} violations)")
+    if eng.recorder is not None and eng.recorder.bundles:
+        for p in eng.recorder.bundles:
+            print(f"  postmortem bundle: {p}")
 
 
 def main():
@@ -91,6 +115,18 @@ def main():
                     help="arrival-gap compression for --async")
     ap.add_argument("--plan", action="store_true",
                     help="print the ParaSpec plan + placement and exit")
+    ap.add_argument("--timelines", action="store_true",
+                    help="record per-request phase timelines "
+                         "(queue/prefill/decode/stall) and print a "
+                         "summary digest")
+    ap.add_argument("--slo-ttft", type=float, default=None,
+                    help="declare a TTFT SLO (seconds); compliance and "
+                         "violations are reported at exit")
+    ap.add_argument("--slo-e2e", type=float, default=None,
+                    help="declare an end-to-end latency SLO (seconds)")
+    ap.add_argument("--postmortem-dir", default=None,
+                    help="dump flight-recorder postmortem bundles here "
+                         "on SLO violations / anomalies")
     args = ap.parse_args()
 
     tcfg = get_config(args.arch)
@@ -114,6 +150,13 @@ def main():
             print(" note:", n)
         return
 
+    slos = []
+    if args.slo_ttft is not None:
+        slos.append({"name": "ttft", "metric": "ttft_s",
+                     "threshold_s": args.slo_ttft})
+    if args.slo_e2e is not None:
+        slos.append({"name": "e2e", "metric": "e2e_s",
+                     "threshold_s": args.slo_e2e})
     tcfg = tcfg.reduced(d_model=128)
     dcfg = MISTRAL_7B.reduced(d_model=64, vocab=tcfg.vocab_size)
     eng = ServingEngine(tcfg, dcfg, hw,
@@ -122,7 +165,10 @@ def main():
                             admission=args.admission,
                             clock="real" if args.run_async else "virtual",
                             qos=args.run_async, preempt=args.run_async,
-                            tenant_weights={"acme": 2.0, "beta": 1.0}))
+                            tenant_weights={"acme": 2.0, "beta": 1.0},
+                            request_timeline=args.timelines,
+                            slos=tuple(slos),
+                            postmortem_dir=args.postmortem_dir))
     eng.init_from_seed(0)
 
     rng = np.random.default_rng(0)
@@ -150,6 +196,7 @@ def main():
         pct = latency_percentiles(done, attr)
         print(f"{name:>5}: " + "  ".join(f"{k}={v:.3f}s"
                                          for k, v in pct.items()))
+    _report_request_obs(eng)
 
 
 if __name__ == "__main__":

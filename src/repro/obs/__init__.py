@@ -20,6 +20,11 @@ from dataclasses import dataclass
 
 from repro.obs.metrics import (NULL_REGISTRY, NullRegistry,  # noqa: F401
                                Registry, acceptance_buckets)
+from repro.obs.request_trace import (NULL_REQUEST_TRACKER,  # noqa: F401
+                                     NullRequestTracker, RequestTracker,
+                                     timelines_summary)
+from repro.obs.slo import (SLO, FlightRecorder, SLOMonitor,  # noqa: F401
+                           as_slos)
 from repro.obs.trace import (NULL_TRACER, NullTracer, Tracer,  # noqa: F401
                              bubble_report)
 

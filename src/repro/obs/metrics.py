@@ -23,20 +23,40 @@ histograms (see ``repro.serving.engine.ServingEngine.metrics``).
 
 :data:`NULL_REGISTRY` is the disabled-mode twin: every instrument is a
 shared no-op singleton, so a metrics-off engine loop allocates nothing.
+
+Thread discipline: the async front door runs engine rounds in a worker
+thread while the event loop may scrape ``snapshot()`` /
+``prometheus_text()`` mid-round.  The hot ``inc()``/``observe()`` path
+stays **lock-free** (single engine writer; CPython list/dict primitives
+are atomic under the GIL) — the registry lock only serializes the cold
+paths: instrument creation and snapshot/exposition, which copy every
+dict with one C-level ``list(d.items())`` call so a concurrent labelset
+insertion can never raise ``dictionary changed size during iteration``.
+Histogram reads derive ``count`` from one atomic copy of the bucket
+array, so the ``count == +Inf cumulative`` invariant holds even when a
+snapshot races an ``observe`` (tested in ``tests/test_obs.py``).
 """
 from __future__ import annotations
 
 import math
+import threading
 
 
 def _label_key(labels: dict) -> tuple:
     return tuple(sorted(labels.items()))
 
 
+def _esc(v) -> str:
+    """Escape a label value per the Prometheus text exposition spec
+    (0.0.4): backslash, double-quote and line-feed."""
+    return (str(v).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
 def _fmt_labels(key: tuple) -> str:
     if not key:
         return ""
-    inner = ",".join(f'{k}="{v}"' for k, v in key)
+    inner = ",".join(f'{k}="{_esc(v)}"' for k, v in key)
     return "{" + inner + "}"
 
 
@@ -57,11 +77,13 @@ class Counter:
         return self.values.get(_label_key(labels), 0.0)
 
     def snapshot(self):
-        return {_fmt_labels(k) or "": v for k, v in self.values.items()}
+        # list() is one C call: atomic vs a concurrent inc-new-labelset
+        return {_fmt_labels(k) or "": v
+                for k, v in list(self.values.items())}
 
     def expose(self) -> list:
         return [f"{self.name}{_fmt_labels(k)} {_num(v)}"
-                for k, v in sorted(self.values.items())]
+                for k, v in sorted(list(self.values.items()))]
 
     kind = "counter"
 
@@ -84,11 +106,12 @@ class Gauge:
         return self.values.get(_label_key(labels), 0.0)
 
     def snapshot(self):
-        return {_fmt_labels(k) or "": v for k, v in self.values.items()}
+        return {_fmt_labels(k) or "": v
+                for k, v in list(self.values.items())}
 
     def expose(self) -> list:
         return [f"{self.name}{_fmt_labels(k)} {_num(v)}"
-                for k, v in sorted(self.values.items())]
+                for k, v in sorted(list(self.values.items()))]
 
     kind = "gauge"
 
@@ -134,11 +157,13 @@ class Histogram:
             if v <= ub:
                 i = j
                 break
-        s["counts"][i] += 1
+        # sum/min/max first, bucket count last: a reader that sees the
+        # bucket increment is then guaranteed to see finite min/max
         s["sum"] += v
         s["count"] += 1
         s["min"] = min(s["min"], v)
         s["max"] = max(s["max"], v)
+        s["counts"][i] += 1
 
     # ------------------------------------------------------------------
     def percentile(self, p: float, **labels) -> float:
@@ -146,48 +171,59 @@ class Histogram:
         observations coincide with bucket upper bounds (e.g. the integer
         acceptance buckets); otherwise accurate to the bucket width."""
         s = self.series.get(_label_key(labels))
-        if s is None or s["count"] == 0:
+        if s is None:
             return float("nan")
-        rank = (p / 100.0) * s["count"]
+        counts = list(s["counts"])        # one atomic copy per read
+        count = sum(counts)
+        if count == 0:
+            return float("nan")
+        lo_all, hi_all = s["min"], s["max"]
+        rank = (p / 100.0) * count
         cum = 0
-        for j, c in enumerate(s["counts"]):
+        for j, c in enumerate(counts):
             if c == 0:
                 continue
-            lo = s["min"] if j == 0 else self.buckets[j - 1]
-            hi = self.buckets[j] if j < len(self.buckets) else s["max"]
+            lo = lo_all if j == 0 else self.buckets[j - 1]
+            hi = self.buckets[j] if j < len(self.buckets) else hi_all
             if cum + c >= rank:
                 frac = (rank - cum) / c
-                return min(max(lo + frac * (hi - lo), s["min"]), s["max"])
+                return min(max(lo + frac * (hi - lo), lo_all), hi_all)
             cum += c
-        return s["max"]
+        return hi_all
 
     def snapshot(self):
         out = {}
-        for k, s in self.series.items():
+        for k, s in list(self.series.items()):
+            # copy counts atomically and derive count from the copy so
+            # the count == +Inf invariant survives a racing observe()
+            counts = list(s["counts"])
+            count = sum(counts)
             cum, buckets = 0, {}
-            for j, c in enumerate(s["counts"][:-1]):
+            for j, c in enumerate(counts[:-1]):
                 cum += c
                 buckets[str(self.buckets[j])] = cum
-            buckets["+Inf"] = cum + s["counts"][-1]
+            buckets["+Inf"] = cum + counts[-1]
             out[_fmt_labels(k) or ""] = {
-                "buckets": buckets, "sum": s["sum"], "count": s["count"],
-                "min": None if s["count"] == 0 else s["min"],
-                "max": None if s["count"] == 0 else s["max"]}
+                "buckets": buckets, "sum": s["sum"], "count": count,
+                "min": None if count == 0 else s["min"],
+                "max": None if count == 0 else s["max"]}
         return out
 
     def expose(self) -> list:
         lines = []
-        for k, s in sorted(self.series.items()):
+        for k, s in sorted(list(self.series.items())):
+            counts = list(s["counts"])
             cum = 0
-            for j, c in enumerate(s["counts"][:-1]):
+            for j, c in enumerate(counts[:-1]):
                 cum += c
                 lk = k + (("le", _num(self.buckets[j])),)
                 lines.append(f"{self.name}_bucket{_fmt_labels(lk)} {cum}")
             lk = k + (("le", "+Inf"),)
             lines.append(f"{self.name}_bucket{_fmt_labels(lk)} "
-                         f"{cum + s['counts'][-1]}")
+                         f"{cum + counts[-1]}")
             lines.append(f"{self.name}_sum{_fmt_labels(k)} {_num(s['sum'])}")
-            lines.append(f"{self.name}_count{_fmt_labels(k)} {s['count']}")
+            lines.append(f"{self.name}_count{_fmt_labels(k)} "
+                         f"{sum(counts)}")
         return lines
 
     kind = "histogram"
@@ -202,18 +238,27 @@ def _num(v: float) -> str:
 
 
 class Registry:
-    """Get-or-create instrument registry with JSON + Prometheus export."""
+    """Get-or-create instrument registry with JSON + Prometheus export.
+
+    The lock guards instrument creation and snapshot/exposition only —
+    the per-observation hot path (``inc``/``set``/``observe``) never
+    acquires it (see the module docstring's thread discipline).
+    """
     enabled = True
 
     def __init__(self):
         self._instruments: dict[str, object] = {}
+        self._lock = threading.Lock()
 
     def _get(self, name, cls, help, **kw):
-        inst = self._instruments.get(name)
+        inst = self._instruments.get(name)   # fast path: exists already
         if inst is None:
-            inst = cls(name, help, **kw)
-            self._instruments[name] = inst
-        elif not isinstance(inst, cls):
+            with self._lock:
+                inst = self._instruments.get(name)
+                if inst is None:
+                    inst = cls(name, help, **kw)
+                    self._instruments[name] = inst
+        if not isinstance(inst, cls):
             raise TypeError(f"{name} already registered as "
                             f"{type(inst).__name__}")
         return inst
@@ -230,16 +275,23 @@ class Registry:
 
     # ------------------------------------------------------------------
     def snapshot(self) -> dict:
-        """Plain-JSON dict: {kind: {name: {labelstr: value}}}."""
+        """Plain-JSON dict: {kind: {name: {labelstr: value}}}.
+        Copy-under-lock: safe to call from a scrape thread while the
+        engine thread observes."""
+        with self._lock:
+            insts = sorted(list(self._instruments.items()))
         out = {"counters": {}, "gauges": {}, "histograms": {}}
-        for name, inst in sorted(self._instruments.items()):
+        for name, inst in insts:
             out[inst.kind + "s"][name] = inst.snapshot()
         return out
 
     def prometheus_text(self) -> str:
-        """Prometheus text exposition format (0.0.4)."""
+        """Prometheus text exposition format (0.0.4); copy-under-lock
+        like :meth:`snapshot`."""
+        with self._lock:
+            insts = sorted(list(self._instruments.items()))
         lines = []
-        for name, inst in sorted(self._instruments.items()):
+        for name, inst in insts:
             if inst.help:
                 lines.append(f"# HELP {name} {inst.help}")
             lines.append(f"# TYPE {name} {inst.kind}")

@@ -107,10 +107,32 @@ def validate_metrics_snapshot(obj) -> list:
 # ---------------------------------------------------------------------------
 # minimal Prometheus exposition parser (round-trip testing)
 
+# Label values are quoted strings with \\, \" and \n escapes (exposition
+# format 0.0.4), so the label block is parsed as a sequence of quoted
+# strings — a value may legally contain '}' or ','.
+_QUOTED = r'"(?:[^"\\]|\\.)*"'
 _SAMPLE_RE = re.compile(
     r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
-    r"(?:\{(?P<labels>[^}]*)\})?\s+(?P<value>\S+)$")
-_LABEL_RE = re.compile(r'(?P<k>[a-zA-Z_][a-zA-Z0-9_]*)="(?P<v>[^"]*)"')
+    r"(?:\{(?P<labels>(?:[a-zA-Z_][a-zA-Z0-9_]*=" + _QUOTED
+    + r",?)*)\})?\s+(?P<value>\S+)$")
+_LABEL_RE = re.compile(
+    r'(?P<k>[a-zA-Z_][a-zA-Z0-9_]*)="(?P<v>(?:[^"\\]|\\.)*)"')
+
+
+def _unescape_label(v: str) -> str:
+    """Invert the exposition-format label escaping (\\\\, \\", \\n)."""
+    out, i = [], 0
+    while i < len(v):
+        c = v[i]
+        if c == "\\" and i + 1 < len(v):
+            nxt = v[i + 1]
+            out.append({"\\": "\\", '"': '"', "n": "\n"}.get(nxt,
+                                                             c + nxt))
+            i += 2
+        else:
+            out.append(c)
+            i += 1
+    return "".join(out)
 
 
 def parse_prometheus_text(text: str) -> dict:
@@ -134,7 +156,7 @@ def parse_prometheus_text(text: str) -> dict:
             raise ValueError(f"unparseable sample line: {line!r}")
         name = m.group("name")
         labels = tuple(sorted(
-            (lm.group("k"), lm.group("v"))
+            (lm.group("k"), _unescape_label(lm.group("v")))
             for lm in _LABEL_RE.finditer(m.group("labels") or "")))
         base = name
         for suffix in ("_bucket", "_sum", "_count"):
@@ -148,6 +170,116 @@ def parse_prometheus_text(text: str) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# request timelines (repro.obs.request_trace)
+
+_TIMELINE_SCHEMA = "repro.request_timeline/v1"
+_TIMELINE_NUM = ("queue_s", "prefill_s", "decode_s", "stall_s",
+                 "preempted_s")
+_TIMELINE_INT = ("tokens", "preemptions", "accepted_total",
+                 "verify_rounds")
+
+
+def validate_request_timeline(tl) -> list:
+    """Problems with one request-timeline digest ([] == valid)."""
+    probs = []
+    if not isinstance(tl, dict):
+        return ["timeline must be an object"]
+    if tl.get("schema") != _TIMELINE_SCHEMA:
+        probs.append(f"schema {tl.get('schema')!r} != "
+                     f"{_TIMELINE_SCHEMA!r}")
+    if not isinstance(tl.get("rid"), int):
+        probs.append("rid must be an int")
+    rid = tl.get("rid", "?")
+    for key in _TIMELINE_NUM:
+        v = tl.get(key)
+        if not isinstance(v, (int, float)) or v < 0:
+            probs.append(f"rid {rid}: {key} {v!r} not a number >= 0")
+    for key in _TIMELINE_INT:
+        v = tl.get(key)
+        if not isinstance(v, int) or v < 0:
+            probs.append(f"rid {rid}: {key} {v!r} not an int >= 0")
+    rounds = tl.get("per_round")
+    if not isinstance(rounds, list):
+        probs.append(f"rid {rid}: per_round must be a list")
+    else:
+        if (isinstance(tl.get("verify_rounds"), int)
+                and tl["verify_rounds"] != len(rounds)):
+            probs.append(f"rid {rid}: verify_rounds "
+                         f"{tl['verify_rounds']} != per_round "
+                         f"length {len(rounds)}")
+        for i, r in enumerate(rounds):
+            if not isinstance(r, dict) or not {"round", "dur_s",
+                                               "accepted",
+                                               "emitted"} <= set(r):
+                probs.append(f"rid {rid}: per_round[{i}] missing keys")
+            elif r["dur_s"] < 0 or r["accepted"] < 0 or r["emitted"] < 0:
+                probs.append(f"rid {rid}: per_round[{i}] negative field")
+        if (not probs and rounds
+                and isinstance(tl.get("accepted_total"), int)):
+            if sum(r["accepted"] for r in rounds) != tl["accepted_total"]:
+                probs.append(f"rid {rid}: accepted_total != sum of "
+                             f"per-round accepted")
+    return probs
+
+
+# ---------------------------------------------------------------------------
+# postmortem bundles (repro.obs.slo.FlightRecorder)
+
+_BUNDLE_SCHEMA = "repro.postmortem/v1"
+_BUNDLE_FILES = ("manifest.json", "trace.json", "metrics.json",
+                 "engine.json", "config.json")
+_ENGINE_DIGEST_KEYS = ("rounds", "tokens_out", "queue_depth")
+
+
+def validate_postmortem_bundle(path: str) -> list:
+    """Problems with an on-disk postmortem bundle ([] == valid): the
+    five section files exist, the manifest matches the schema, the ring
+    trace validates as a Chrome trace, the metrics snapshot validates,
+    and the engine digest carries its required keys."""
+    import os
+    probs = []
+    if not os.path.isdir(path):
+        return [f"{path}: not a directory"]
+    objs = {}
+    for fname in _BUNDLE_FILES:
+        fp = os.path.join(path, fname)
+        if not os.path.isfile(fp):
+            probs.append(f"missing {fname}")
+            continue
+        try:
+            with open(fp) as f:
+                objs[fname] = json.load(f)
+        except ValueError as e:
+            probs.append(f"{fname}: not valid JSON ({e})")
+    man = objs.get("manifest.json")
+    if man is not None:
+        if man.get("schema") != _BUNDLE_SCHEMA:
+            probs.append(f"manifest schema {man.get('schema')!r} != "
+                         f"{_BUNDLE_SCHEMA!r}")
+        for key in ("reason", "bundle_seq", "ring_rounds"):
+            if key not in man:
+                probs.append(f"manifest missing {key!r}")
+    if "trace.json" in objs:
+        probs += [f"trace: {p}"
+                  for p in validate_chrome_trace(objs["trace.json"])]
+    if "metrics.json" in objs:
+        snap = objs["metrics.json"]
+        snap = snap.get("metrics", snap)   # accept both wrapper shapes
+        if snap:                            # empty == metrics disabled
+            probs += [f"metrics: {p}"
+                      for p in validate_metrics_snapshot(snap)]
+    eng = objs.get("engine.json")
+    if eng is not None:
+        for key in _ENGINE_DIGEST_KEYS:
+            if key not in eng:
+                probs.append(f"engine digest missing {key!r}")
+    if "config.json" in objs and not isinstance(objs["config.json"],
+                                                dict):
+        probs.append("config.json must be an object")
+    return probs
+
+
+# ---------------------------------------------------------------------------
 
 
 def main(argv=None) -> int:
@@ -157,6 +289,9 @@ def main(argv=None) -> int:
     ap.add_argument("trace", help="Chrome trace-event JSON path")
     ap.add_argument("metrics", nargs="?",
                     help="metrics snapshot JSON path (optional)")
+    ap.add_argument("--bundle", action="append", default=[],
+                    help="postmortem bundle directory to validate "
+                         "(repeatable)")
     args = ap.parse_args(argv)
     with open(args.trace) as f:
         probs = validate_chrome_trace(json.load(f))
@@ -178,6 +313,12 @@ def main(argv=None) -> int:
         print(f"{args.metrics}: "
               f"{'OK' if not mp else f'{len(mp)} problems'}")
         probs += mp
+    for bundle in args.bundle:
+        bp = validate_postmortem_bundle(bundle)
+        for p in bp:
+            print(f"bundle {bundle}: {p}")
+        print(f"{bundle}: {'OK' if not bp else f'{len(bp)} problems'}")
+        probs += bp
     return 1 if probs else 0
 
 

@@ -34,6 +34,7 @@ boundaries, so enabling tracing never retraces the fused step.
 """
 from __future__ import annotations
 
+import threading
 import time
 
 try:  # pragma: no cover - exercised indirectly
@@ -161,18 +162,27 @@ class Tracer:
         self.t0 = time.perf_counter()
         self.events: list[dict] = []         # chrome trace events (us)
         self._tids: dict[str, int] = {}
+        # Guards track creation only: event appends are GIL-atomic, and
+        # readers (to_chrome_trace / bubble accounting) take one atomic
+        # list() copy — the engine's worker thread can keep recording
+        # while the asyncio side exports mid-round.
+        self._lock = threading.Lock()
 
     # ------------------------------------------------------------------
     def _tid(self, track: str) -> int:
-        tid = self._tids.get(track)
+        tid = self._tids.get(track)          # fast path: known track
         if tid is None:
-            try:
-                tid = TRACKS.index(track)
-            except ValueError:
-                tid = len(TRACKS) + len(self._tids)
-            self._tids[track] = tid
-            self.events.append({"ph": "M", "name": "thread_name", "pid": 1,
-                                "tid": tid, "args": {"name": track}})
+            with self._lock:
+                tid = self._tids.get(track)
+                if tid is None:
+                    try:
+                        tid = TRACKS.index(track)
+                    except ValueError:
+                        tid = len(TRACKS) + len(self._tids)
+                    self._tids[track] = tid
+                    self.events.append(
+                        {"ph": "M", "name": "thread_name", "pid": 1,
+                         "tid": tid, "args": {"name": track}})
         return tid
 
     def _us(self, t: float) -> float:
@@ -275,7 +285,7 @@ def bubble_report(tracer, round_track: str = "round",
     "gpu_busy_frac", "mean_round_busy_frac"}``.
     """
     rounds, idle_s, device = [], 0.0, []
-    for ev in tracer.events:
+    for ev in list(tracer.events):   # atomic copy: recorder may append
         if ev.get("ph") != "X":
             continue
         t0 = ev["ts"] * 1e-6
@@ -310,7 +320,7 @@ def bubble_report(tracer, round_track: str = "round",
 
 
 def tracer_track_name(tracer, tid: int) -> str | None:
-    for name, t in tracer._tids.items():
+    for name, t in list(tracer._tids.items()):
         if t == tid:
             return name
     return None

@@ -54,7 +54,7 @@ keeping the greedy stream lossless).
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import asdict, dataclass, field
 
 import jax
 import jax.numpy as jnp
@@ -70,7 +70,9 @@ from repro.core.spec_decode import (record_acceptance, tree_n_nodes,
                                     tree_supported)
 from repro.models.transformer import (admit_sequence_paged, init_cache,
                                       init_paged_cache, release_slot_paged)
-from repro.obs import bubble_report, make_obs
+from repro.obs import (NULL_REQUEST_TRACKER, FlightRecorder,
+                       RequestTracker, SLOMonitor, as_slos, bubble_report,
+                       make_obs)
 from repro.obs.metrics import LATENCY_BUCKETS
 from repro.serving.paged_kv import BlockAllocator, prefix_block_keys
 from repro.sim.hardware import ENV1, HardwareSpec
@@ -198,6 +200,25 @@ class SchedulerConfig:
                                   # get honest per-phase device timing
     trace_fence: bool = True      # block_until_ready at device-span exit
     trace_annotations: bool = False  # jax.profiler.TraceAnnotation per span
+    # ---- request-scoped observability + SLOs (repro.obs) ----
+    request_timeline: bool = False  # per-request phase timelines (queue/
+                                  # prefill/decode/preempted/stall) +
+                                  # req:{rid} Chrome tracks.  Host-side
+                                  # only: never crosses a jit boundary,
+                                  # so outputs stay token-identical
+    slos: tuple = ()              # declarative objectives (repro.obs.SLO
+                                  # instances or plain dicts) evaluated
+                                  # at first token and retirement
+    flight_recorder: bool = True  # always-on bounded ring of round
+                                  # records; dumps a postmortem bundle on
+                                  # SLO violations / anomaly signals
+                                  # (inactive when all obs is off)
+    flight_capacity: int = 256    # ring capacity, rounds
+    postmortem_dir: str | None = None  # bundle output directory (None:
+                                  # triggers are counted, nothing is
+                                  # ever written to disk)
+    postmortem_cooldown_s: float = 30.0  # min seconds between bundles
+    postmortem_max_bundles: int = 4      # lifetime bundle cap
 
 
 @dataclass
@@ -258,6 +279,28 @@ class ServingEngine:
                             fence=self.config.trace_fence,
                             annotations=self.config.trace_annotations,
                             virtual_clock=lambda: self._now)
+        # request-scoped observability: per-request timelines, SLO
+        # monitor, always-on flight recorder (see repro.obs.request_trace
+        # / repro.obs.slo).  All host-side; NULL tracker when off.
+        cfg = self.config
+        self.requests = (RequestTracker(tracer=self.obs.tracer,
+                                        clock=lambda: self._now)
+                         if cfg.request_timeline else NULL_REQUEST_TRACKER)
+        self._slos = as_slos(cfg.slos)
+        self.recorder = None
+        if cfg.flight_recorder and (self.obs.enabled or self._slos
+                                    or cfg.postmortem_dir
+                                    or cfg.request_timeline):
+            self.recorder = FlightRecorder(
+                capacity=cfg.flight_capacity,
+                out_dir=cfg.postmortem_dir,
+                cooldown_s=cfg.postmortem_cooldown_s,
+                max_bundles=cfg.postmortem_max_bundles)
+        self.slo_monitor = (SLOMonitor(self._slos,
+                                       metrics=self.obs.metrics,
+                                       tracer=self.obs.tracer,
+                                       on_violation=self._on_slo_violation)
+                            if self._slos else None)
         self.engine = SpecOffloadEngine(self.target_cfg, self.draft_cfg,
                                         self.hw, obs=self.obs)
         self._splice = jax.jit(_splice_slot)
@@ -279,6 +322,7 @@ class ServingEngine:
         self._occ_window = []
         self._planned_occ = 1.0
         self._accept_window = []
+        self._accept_last = None      # latest live-slot acceptance mean
         self._planned_accept = 0.7    # planner's accept_prob default
         self._len_sum, self._gen_sum, self._req_seen = 0, 0, 0
         self.replan_events = []
@@ -334,8 +378,14 @@ class ServingEngine:
                     "serve_requests_rejected_total",
                     "requests rejected at submit (never fits / bounded "
                     "queue full)").inc(1, reason=reason, tenant=req.tenant)
+            self.requests.on_reject(req, reason)
+            if self.recorder is not None:
+                self.recorder.record_instant(
+                    "rejected", {"rid": req.rid, "reason": reason,
+                                 "tenant": req.tenant})
             return False
         self._tenants_seen.add(req.tenant)
+        self.requests.on_submit(req)
         self._queue.append(req)
         return True
 
@@ -555,6 +605,7 @@ class ServingEngine:
             if cfg.qos:
                 self._charge_tenant(req, len(prompt))
             t_wall = time.time()
+            pt0 = time.perf_counter()
             with self.obs.tracer.span("admit", "admit") as asp:
                 st = self.engine.prefill_batch(prompt[None, :],
                                                self._max_len,
@@ -580,8 +631,14 @@ class ServingEngine:
                 asp.set("slot", slot_idx)
             t0 = int(np.asarray(st.t_next)[0])
             half.t_next = half.t_next.at[slot_idx].set(t0)
+            pt1 = time.perf_counter()
             dt = time.time() - t_wall
             self._tick(dt)
+            # resumed iff first token already produced (re-admission
+            # after a preemption); closes the park interval as queue or
+            # preempted time on the request's timeline
+            self.requests.on_admit(req, pt0, pt1, half=h, slot=slot_idx,
+                                   resumed=not np.isnan(req.first_token_s))
             if self.obs.enabled:
                 # splicing the prefilled KV into the serving cache is the
                 # engine's host->device KV hand-off (paper Table 3 P row)
@@ -606,6 +663,8 @@ class ServingEngine:
                         "arrival -> first token, labeled per tenant",
                         buckets=LATENCY_BUCKETS).observe(
                             req.ttft_s, tenant=req.tenant)
+                if self.slo_monitor is not None:
+                    self.slo_monitor.observe_ttft(req)
             slot = slots[slot_idx]
             slot.req = req
             slot.emitted = list(req.progress) + [t0]
@@ -639,6 +698,10 @@ class ServingEngine:
                 "admit", "retired",
                 {"rid": req.rid, "half": h, "slot": idx,
                  "tokens": len(req.result)})
+        self.requests.on_finish(req)
+        if self.slo_monitor is not None:
+            self.slo_monitor.observe_finish(
+                req, self.requests.timeline(req.rid))
         self._release_slot(h, idx)
         if self.finish_hook is not None:
             self.finish_hook(req)
@@ -676,6 +739,11 @@ class ServingEngine:
         req.progress = list(slot.emitted)
         req.preemptions += 1
         self.preempted_total += 1
+        self.requests.on_preempt(req)
+        if self.recorder is not None:
+            self.recorder.record_instant(
+                "preempted", {"rid": req.rid, "tenant": req.tenant,
+                              "progress": len(req.progress)})
         self._release_slot(h, idx)
         self._queue.append(req)
         if self.obs.enabled:
@@ -753,7 +821,8 @@ class ServingEngine:
             slot.accept_ema = 0.8 * slot.accept_ema + 0.2 * frac
             fracs.append(slot.accept_ema)
         if fracs:
-            self._accept_window.append(float(np.mean(fracs)))
+            self._accept_last = float(np.mean(fracs))
+            self._accept_window.append(self._accept_last)
 
     def _maybe_replan(self):
         cfg = self.config
@@ -872,12 +941,44 @@ class ServingEngine:
             self._record_acceptance_ema(v, out)
             if self.obs.metrics.enabled:
                 self._round_metrics(out, live_v)
+            if self.requests.enabled:
+                # attribute the fused round to every live request BEFORE
+                # retirement pops slots: the verified half may have
+                # emitted tokens, the anti-phase half got fresh drafts —
+                # both are pipeline work done on the request's behalf
+                rd = self._rounds - 1
+                for idx, slot in enumerate(self._slots[v]):
+                    if not slot.done:
+                        self.requests.on_round(
+                            slot.req, rd, out.t0, out.t1,
+                            accepted=int(out.n_accept[idx]),
+                            emitted=int(out.n_emitted[idx]), role="verify")
+                for slot in self._slots[1 - v]:
+                    if not slot.done:
+                        self.requests.on_round(slot.req, rd, out.t0,
+                                               out.t1, role="draft")
             completed += self._process_emissions(v, out)
             self._maybe_replan()
             self._v = 1 - v
         dt = time.time() - t_step0
         self._wall_s += dt
         self._open_window_s += dt
+        if self.recorder is not None:
+            # black box: one small record per round + anomaly detectors
+            # (works without the span tracer — busy fraction is the
+            # fused interval over the round's wall time)
+            busy_frac = max(0.0, out.t1 - out.t0) / max(dt, 1e-9)
+            self.recorder.record_round(
+                {"round": self._rounds - 1, "t0": out.t0, "t1": out.t1,
+                 "dur_s": dt, "busy_frac": busy_frac,
+                 "queue_depth": len(self._queue),
+                 "accept_mean": self._accept_last,
+                 "tokens_out": self._tokens_out})
+            hit = self.recorder.check(accept_mean=self._accept_last,
+                                      busy_frac=busy_frac,
+                                      queue_depth=len(self._queue))
+            if hit is not None:
+                self._postmortem(*hit)
         return completed
 
     def run(self, max_rounds: int = 100_000) -> list:
@@ -983,6 +1084,69 @@ class ServingEngine:
         return self.obs.tracer.to_chrome_trace()
 
     # ------------------------------------------------------------------
+    # request timelines, SLOs, flight recorder
+
+    def request_timelines(self) -> list:
+        """Final JSON timeline digests of every retired request
+        (``SchedulerConfig(request_timeline=True)``; [] otherwise)."""
+        return self.requests.timelines()
+
+    def request_timeline(self, rid: int) -> dict | None:
+        """One request's timeline digest (provisional while live)."""
+        return self.requests.timeline(rid)
+
+    def slo_report(self) -> dict | None:
+        """Per-(slo, tenant) compliance + violation log, or None when no
+        SLOs are configured."""
+        return None if self.slo_monitor is None else self.slo_monitor.report()
+
+    def _on_slo_violation(self, slo, event: dict):
+        """SLOMonitor callback: log the violation into the black box and
+        dump a postmortem bundle (cooldown/cap limited)."""
+        if self.recorder is not None:
+            self.recorder.record_instant("slo_violation", dict(event))
+            self._postmortem(f"slo_{slo.name}", dict(event))
+
+    def _postmortem(self, reason: str, args: dict | None = None):
+        """Dump a flight-recorder bundle; sections are callables so a
+        cooldown-suppressed trigger costs nothing."""
+        if self.recorder is None:
+            return None
+        path = self.recorder.trigger(
+            reason, args,
+            metrics=self.metrics,
+            engine=self._engine_digest,
+            config=self._config_digest)
+        if path is not None and self.obs.enabled:
+            self.obs.metrics.counter(
+                "postmortem_bundles_total",
+                "flight-recorder postmortem bundles dumped").inc(
+                    1, reason=reason)
+            self.obs.tracer.instant("slo", "postmortem",
+                                    {"reason": reason, "path": path})
+        return path
+
+    def _engine_digest(self) -> dict:
+        """Small JSON engine-state summary for postmortem bundles."""
+        live = (sum(1 for half in self._slots for s in half if not s.done)
+                if self._slots is not None else 0)
+        return {"rounds": self._rounds, "tokens_out": self._tokens_out,
+                "queue_depth": len(self._queue), "live": live,
+                "wall_s": self._wall_s, "now_s": self._now,
+                "rejected": self.rejected_total,
+                "preempted": self.preempted_total,
+                "mean_occupancy": self._occ_sum / max(1, self._rounds),
+                "accept_mean": self._accept_last,
+                "spec_mode": ("tree" if self.config.spec_tree is not None
+                              else "chain")}
+
+    def _config_digest(self) -> dict:
+        """Scheduler + planner config as plain JSON."""
+        d = asdict(self.config)
+        d["slos"] = [s.to_dict() for s in self._slos]
+        return d
+
+    # ------------------------------------------------------------------
     def throughput(self, done: list | None = None) -> float:
         """Tokens/s over the engine's accumulated real wall time (not the
         max per-request latency, which overstates multi-wave runs).
@@ -1068,6 +1232,10 @@ class ServingEngine:
             "rejected": self.rejected_total,
             "preempted": self.preempted_total,
             "replans": len(self.replan_events),
+            "slo_violations": (len(self.slo_monitor.violations)
+                               if self.slo_monitor is not None else 0),
+            "postmortems": (len(self.recorder.bundles)
+                            if self.recorder is not None else 0),
             "spec_mode": ("tree" if self.config.spec_tree is not None
                           else "chain"),
             "spec_tree": self.config.spec_tree,

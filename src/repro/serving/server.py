@@ -219,11 +219,15 @@ class AsyncServingServer:
                 fut.set_result(ok)
 
     def _flush_emissions(self):
+        tracker = self.engine.requests
         while self._emissions:
             rid, tok = self._emissions.popleft()
             q = self._streams.get(rid)
             if q is not None:
                 q.put_nowait(tok)
+                if tok is not None and tracker.enabled:
+                    # stream delivery lands on the request's timeline
+                    tracker.on_delivery(rid)
 
     async def _serve_loop(self):
         eng = self.engine

@@ -210,6 +210,88 @@ def test_registry_kind_collision_rejected():
         reg.gauge("x_total")
 
 
+def test_prometheus_label_escaping_round_trip():
+    """Label values with quotes, backslashes, newlines and braces must
+    survive exposition -> parse (format 0.0.4 escaping)."""
+    nasty = 'he"llo\n{x}\\'
+    reg = Registry()
+    reg.counter("esc_total").inc(7, tenant=nasty, ok="plain")
+    reg.histogram("esc_lat", buckets=(1.0,)).observe(0.5, tenant=nasty)
+    text = reg.prometheus_text()
+    assert '\\"' in text and "\\n" in text and "\\\\" in text
+    assert "\n{x}" not in text            # raw newline would split lines
+    parsed = parse_prometheus_text(text)
+    key = (("ok", "plain"), ("tenant", nasty))
+    assert parsed["esc_total"]["samples"][key] == 7.0
+    assert parsed["esc_lat_count"]["samples"][(("tenant", nasty),)] == 1.0
+
+
+def test_histogram_percentile_edge_cases():
+    from repro.obs.metrics import DEFAULT_BUCKETS
+    reg = Registry()
+    # empty series / never-observed labelset -> nan, never a crash
+    h = reg.histogram("edge", buckets=acceptance_buckets(4))
+    assert np.isnan(h.percentile(50))
+    assert np.isnan(h.percentile(50, tenant="ghost"))
+    # single observation: every percentile is that observation
+    h.observe(3.0)
+    for p in (0, 50, 100):
+        assert h.percentile(p) == pytest.approx(3.0)
+    # all observations in one bucket: clamped to [min, max]
+    h2 = reg.histogram("one_bucket", buckets=DEFAULT_BUCKETS)
+    for _ in range(50):
+        h2.observe(0.042)
+    for p in (0, 25, 99, 100):
+        assert h2.percentile(p) == pytest.approx(0.042)
+    # p=0 -> min, p=100 -> max, both exact
+    h3 = reg.histogram("spread", buckets=DEFAULT_BUCKETS)
+    for v in (0.002, 0.3, 7.0):
+        h3.observe(v)
+    assert h3.percentile(0) == pytest.approx(0.002)
+    assert h3.percentile(100) == pytest.approx(7.0)
+
+
+def test_registry_concurrent_snapshot_while_observe():
+    """The async front door scrapes snapshot()/prometheus_text() from
+    the event loop while the engine thread observes: no exceptions, and
+    every histogram snapshot keeps count == +Inf cumulative."""
+    import threading
+
+    reg = Registry()
+    stop = threading.Event()
+    errs: list = []
+
+    def writer():
+        i = 0
+        try:
+            while not stop.is_set():
+                # new labelsets force dict growth mid-iteration
+                reg.counter("w_total").inc(1, shard=str(i % 37))
+                reg.gauge("w_g").set(i, shard=str(i % 11))
+                reg.histogram("w_h").observe((i % 100) / 100.0,
+                                             shard=str(i % 7))
+                i += 1
+        except Exception as e:          # pragma: no cover - failure path
+            errs.append(e)
+
+    threads = [threading.Thread(target=writer) for _ in range(2)]
+    for t in threads:
+        t.start()
+    try:
+        for _ in range(200):
+            snap = reg.snapshot()
+            assert validate_metrics_snapshot(snap) == []
+            parse_prometheus_text(reg.prometheus_text())
+            for series in snap["histograms"].get("w_h", {}).values():
+                assert series["count"] == series["buckets"]["+Inf"]
+            reg.histogram("w_h").percentile(99, shard="3")
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+    assert errs == []
+
+
 # ---------------------------------------------------------------------------
 # disabled mode: zero cost, nothing allocated per round
 
